@@ -1,0 +1,46 @@
+"""Benchmark driver: one benchmark per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV.  ``--quick`` shrinks the expensive
+simulations; ``--only fig14`` runs a single figure.  The roofline section
+reads results/dryrun/*.json produced by ``python -m repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures
+    from benchmarks.roofline import csv_rows
+
+    print("name,value,derived")
+    for fn in paper_figures.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.monotonic()
+        try:
+            rows = fn(quick=args.quick)
+        except Exception as e:  # pragma: no cover
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}", flush=True)
+            continue
+        for name, value, derived in rows:
+            print(f"{name},{value:.4f},{derived}", flush=True)
+        print(f"_timing/{fn.__name__}_s,{time.monotonic() - t0:.2f},", flush=True)
+
+    if args.only is None or "roofline" in args.only:
+        try:
+            for name, value, derived in csv_rows(args.dryrun_dir):
+                print(f"{name},{value:.5f},{derived}", flush=True)
+        except Exception as e:  # pragma: no cover
+            print(f"roofline,ERROR,{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

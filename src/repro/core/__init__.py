@@ -1,0 +1,46 @@
+"""FaaSNet core: function trees, FT manager, block store, topologies, protocol."""
+from .blockstore import (
+    DEFAULT_BLOCK_SIZE,
+    BlockManifest,
+    BlockReader,
+    ReadStats,
+    read_manifest,
+    write_blockstore,
+)
+from .ft_manager import FTManager, VMInfo
+from .function_tree import FTNode, FunctionTree
+from .provisioning import ProvisionState, ProvisionTask, RPCCosts
+from .topology import (
+    REGISTRY,
+    DistributionPlan,
+    Flow,
+    baseline_plan,
+    dadi_plan,
+    faasnet_plan,
+    kraken_plan,
+    on_demand_plan,
+)
+
+__all__ = [
+    "DEFAULT_BLOCK_SIZE",
+    "BlockManifest",
+    "BlockReader",
+    "ReadStats",
+    "read_manifest",
+    "write_blockstore",
+    "FTManager",
+    "VMInfo",
+    "FTNode",
+    "FunctionTree",
+    "ProvisionState",
+    "ProvisionTask",
+    "RPCCosts",
+    "REGISTRY",
+    "DistributionPlan",
+    "Flow",
+    "baseline_plan",
+    "dadi_plan",
+    "faasnet_plan",
+    "kraken_plan",
+    "on_demand_plan",
+]

@@ -1,0 +1,233 @@
+"""FT manager — the scheduler-side control plane (paper §3.3).
+
+Responsibilities (all control-plane; no payload bytes flow through here):
+  * one :class:`FunctionTree` per function id (``insert``/``delete`` API);
+  * the VM pool: free pool → active pool reservation, idle reclaim after a
+    configurable lifespan (15 min in Alibaba's production config), failure
+    detection → tree repair;
+  * function→VM placement with the ≤ ``max_functions_per_vm`` limit (20 in
+    production) and the FT-aware placement refinement of paper §5 (prefer
+    VMs that already appear in few trees / as leaves, to balance per-VM
+    in/out bandwidth across overlapping FTs);
+  * the ``<function_id, FT>`` metadata map, snapshottable to a dict for the
+    etcd-style metadata-store sync the paper describes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .function_tree import FunctionTree
+
+
+@dataclass
+class VMInfo:
+    vm_id: str
+    address: str = ""
+    port: int = 0
+    mem_mb: int = 4096
+    functions: set[str] = field(default_factory=set)  # function ids placed here
+    last_active: float = 0.0
+    alive: bool = True
+
+    def load(self) -> int:
+        return len(self.functions)
+
+
+class FTManager:
+    """Per-function tree + VM pool manager embedded in the FaaS scheduler."""
+
+    def __init__(
+        self,
+        *,
+        max_functions_per_vm: int = 20,
+        vm_idle_reclaim_s: float = 15 * 60.0,
+        ft_aware_placement: bool = True,
+    ) -> None:
+        self.trees: dict[str, FunctionTree] = {}
+        self.vms: dict[str, VMInfo] = {}
+        self.free_pool: list[str] = []
+        self.max_functions_per_vm = max_functions_per_vm
+        self.vm_idle_reclaim_s = vm_idle_reclaim_s
+        self.ft_aware_placement = ft_aware_placement
+        # counters for tests / telemetry
+        self.stats = {
+            "inserts": 0,
+            "deletes": 0,
+            "repairs": 0,
+            "reclaims": 0,
+            "reservations": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # VM pool
+    # ------------------------------------------------------------------
+    def add_free_vm(self, vm: VMInfo) -> None:
+        if vm.vm_id in self.vms:
+            raise ValueError(f"vm {vm.vm_id!r} already registered")
+        self.vms[vm.vm_id] = vm
+        self.free_pool.append(vm.vm_id)
+
+    def reserve_vm(self, now: float = 0.0) -> Optional[VMInfo]:
+        """Move one VM from the free pool to active (scheduler scale-out)."""
+        while self.free_pool:
+            vm_id = self.free_pool.pop(0)
+            vm = self.vms[vm_id]
+            if vm.alive:
+                vm.last_active = now
+                self.stats["reservations"] += 1
+                return vm
+        return None
+
+    def release_vm(self, vm_id: str) -> None:
+        """Return an active VM (no functions left) to the free pool."""
+        vm = self.vms[vm_id]
+        assert not vm.functions, "cannot release a VM still holding functions"
+        if vm.alive:
+            self.free_pool.append(vm_id)
+
+    # ------------------------------------------------------------------
+    # Tree membership (insert / delete drive everything else)
+    # ------------------------------------------------------------------
+    def tree(self, function_id: str) -> FunctionTree:
+        if function_id not in self.trees:
+            self.trees[function_id] = FunctionTree(function_id)
+        return self.trees[function_id]
+
+    def insert(self, function_id: str, vm_id: str, now: float = 0.0) -> str | None:
+        """Add ``vm_id`` to the function's FT; returns the upstream peer id.
+
+        Returns ``None`` when the new node is the root (it will fetch from
+        the registry / backing store instead of a peer).
+        """
+        vm = self.vms[vm_id]
+        if len(vm.functions) >= self.max_functions_per_vm:
+            raise RuntimeError(
+                f"placement limit: vm {vm_id} already holds "
+                f"{len(vm.functions)} functions"
+            )
+        ft = self.tree(function_id)
+        ft.insert(vm_id)
+        vm.functions.add(function_id)
+        vm.last_active = now
+        self.stats["inserts"] += 1
+        return ft.parent_of(vm_id)
+
+    def delete(self, function_id: str, vm_id: str) -> None:
+        ft = self.trees[function_id]
+        ft.delete(vm_id)
+        self.vms[vm_id].functions.discard(function_id)
+        self.stats["deletes"] += 1
+        if len(ft) == 0:
+            del self.trees[function_id]
+
+    # ------------------------------------------------------------------
+    # Placement (paper §3.3 "Function Placement on VMs" + §5 FT-aware)
+    # ------------------------------------------------------------------
+    def pick_vm_for(self, function_id: str, now: float = 0.0) -> Optional[VMInfo]:
+        """Choose a host for a new instance of ``function_id``.
+
+        Binpacking baseline: any active VM with spare function slots that
+        does not already host this function.  FT-aware refinement (§5):
+        prefer the VM currently involved in the fewest trees and, among
+        those, one that is a leaf in most of its trees — leaves have zero
+        outbound seeding load, so adding an inbound stream there balances
+        bandwidth.  Falls back to reserving a free VM.
+        """
+        candidates = [
+            vm
+            for vm in self.vms.values()
+            if vm.alive
+            and vm.functions
+            and function_id not in vm.functions
+            and len(vm.functions) < self.max_functions_per_vm
+        ]
+        if candidates:
+            if self.ft_aware_placement:
+                candidates.sort(key=lambda vm: (vm.load(), self._seed_load(vm.vm_id)))
+            else:
+                candidates.sort(key=lambda vm: -vm.load())  # pure binpack: fill fullest
+            return candidates[0]
+        return self.reserve_vm(now)
+
+    def _seed_load(self, vm_id: str) -> int:
+        """Total number of downstream children across all trees (outbound streams)."""
+        n = 0
+        for fid in self.vms[vm_id].functions:
+            ft = self.trees.get(fid)
+            if ft is not None and vm_id in ft:
+                n += len(ft.children_of(vm_id))
+        return n
+
+    # ------------------------------------------------------------------
+    # Reclaim + failure handling (paper §3.2 delete, §3.3 fault tolerance)
+    # ------------------------------------------------------------------
+    def reclaim_idle(self, now: float) -> list[str]:
+        """Reclaim VMs idle past the lifespan; their trees rebalance."""
+        reclaimed = []
+        for vm in list(self.vms.values()):
+            if (
+                vm.alive
+                and vm.functions
+                and now - vm.last_active >= self.vm_idle_reclaim_s
+            ):
+                for fid in list(vm.functions):
+                    self.delete(fid, vm.vm_id)
+                self.release_vm(vm.vm_id)
+                self.stats["reclaims"] += 1
+                reclaimed.append(vm.vm_id)
+        return reclaimed
+
+    def on_vm_failure(self, vm_id: str) -> list[str]:
+        """Heartbeat miss: drop the VM from every tree it belongs to.
+
+        Returns the list of function ids whose trees were repaired — the
+        provisioning layer must restart the inbound streams of any node
+        whose parent changed (it learns those via FunctionTree.on_reparent).
+        """
+        vm = self.vms[vm_id]
+        vm.alive = False
+        repaired = []
+        for fid in list(vm.functions):
+            self.delete(fid, vm_id)
+            self.stats["repairs"] += 1
+            repaired.append(fid)
+        vm.functions.clear()
+        return repaired
+
+    # ------------------------------------------------------------------
+    # Metadata-store sync (paper: scheduler shards sync with etcd)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "trees": {fid: ft.to_dict() for fid, ft in self.trees.items()},
+            "vms": {
+                vid: {
+                    "address": vm.address,
+                    "port": vm.port,
+                    "functions": sorted(vm.functions),
+                    "alive": vm.alive,
+                    "last_active": vm.last_active,
+                }
+                for vid, vm in self.vms.items()
+            },
+            "free_pool": list(self.free_pool),
+        }
+
+    @classmethod
+    def restore(cls, snap: dict, **kwargs) -> "FTManager":
+        mgr = cls(**kwargs)
+        for vid, v in snap["vms"].items():
+            mgr.vms[vid] = VMInfo(
+                vm_id=vid,
+                address=v["address"],
+                port=v["port"],
+                functions=set(v["functions"]),
+                last_active=v["last_active"],
+                alive=v["alive"],
+            )
+        mgr.free_pool = list(snap["free_pool"])
+        from .function_tree import FunctionTree as FT
+
+        mgr.trees = {fid: FT.from_dict(d) for fid, d in snap["trees"].items()}
+        return mgr

@@ -1,0 +1,184 @@
+"""Distribution topologies: FaaSNet FTs vs the paper's comparison systems.
+
+The simulator (``repro.sim``) is topology-agnostic: each system under test
+is described by a :class:`DistributionPlan` — for every node that needs the
+payload, *whom* it fetches each piece from and what control-plane overheads
+apply.  This module builds plans for:
+
+  * ``faasnet``    — per-function balanced binary FT (this paper);
+  * ``baseline``   — every VM pulls the whole image from the central
+                     registry (Alibaba's production setup, `docker pull`);
+  * ``on_demand``  — like ``baseline`` but fetches only the startup subset
+                     of blocks, still from the registry (paper's optimized
+                     baseline);
+  * ``kraken``     — layer-granularity trees with a dedicated origin/root
+                     serving seeding + metadata + coordination (paper §3.4,
+                     Figure 10: overlapping layer trees form an all-to-all
+                     mesh across VMs);
+  * ``dadi_p2p``   — tree-structured P2P with a single resource-constrained
+                     root VM that both seeds data and manages topology.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from .function_tree import FunctionTree
+
+REGISTRY = "__registry__"  # pseudo-node: the central backing store
+
+
+@dataclass(frozen=True)
+class Flow:
+    """One piece of payload moving src → dst (control plane already resolved)."""
+
+    src: str
+    dst: str
+    piece: str  # e.g. "img" for whole payload, "layer3", "blk:17"
+    bytes: int
+
+
+@dataclass
+class DistributionPlan:
+    """Everything the simulator needs to time one provisioning wave."""
+
+    flows: list[Flow]
+    # Per-node extra control-plane latency before its first fetch starts
+    # (metadata RPCs, manifest download, coordination with a root).
+    control_latency: dict[str, float] = field(default_factory=dict)
+    # Nodes whose CPU does coordination work per downstream request (the
+    # Kraken origin / DADI root bottleneck): dst-node -> coordinator node.
+    coordinator: dict[str, str] = field(default_factory=dict)
+    # Whether a node may forward a piece downstream before holding all of it
+    # (FaaSNet streams block-by-block; docker-pull systems do not).
+    streaming: bool = True
+
+
+# ----------------------------------------------------------------------
+# FaaSNet
+# ----------------------------------------------------------------------
+def faasnet_plan(
+    ft: FunctionTree,
+    *,
+    image_bytes: int,
+    startup_fraction: float = 1.0,
+    manifest_latency: float = 0.010,
+) -> DistributionPlan:
+    """Blocks stream down FT edges; root fetches from the registry.
+
+    ``startup_fraction`` < 1 models on-demand fetch: only that fraction of
+    the payload must arrive before the container can start (§3.5).
+    """
+    need = int(image_bytes * startup_fraction)
+    flows = []
+    control = {}
+    for node in ft.bfs():
+        up = ft.parent_of(node.vm_id) or REGISTRY
+        flows.append(Flow(up, node.vm_id, "img", need))
+        control[node.vm_id] = manifest_latency  # fetch .tar manifest from MDS
+    return DistributionPlan(flows=flows, control_latency=control, streaming=True)
+
+
+# ----------------------------------------------------------------------
+# Centralized baselines
+# ----------------------------------------------------------------------
+def baseline_plan(nodes: list[str], *, image_bytes: int) -> DistributionPlan:
+    """docker pull: whole image from the registry, no streaming start."""
+    flows = [Flow(REGISTRY, n, "img", image_bytes) for n in nodes]
+    return DistributionPlan(flows=flows, streaming=False)
+
+
+def on_demand_plan(
+    nodes: list[str],
+    *,
+    image_bytes: int,
+    startup_fraction: float,
+    manifest_latency: float = 0.010,
+) -> DistributionPlan:
+    """Registry-served lazy fetch: less data, same central bottleneck."""
+    need = int(image_bytes * startup_fraction)
+    flows = [Flow(REGISTRY, n, "img", need) for n in nodes]
+    control = {n: manifest_latency for n in nodes}
+    return DistributionPlan(flows=flows, control_latency=control, streaming=True)
+
+
+# ----------------------------------------------------------------------
+# Kraken-like: layer trees + origin root (paper Figure 10)
+# ----------------------------------------------------------------------
+def kraken_plan(
+    nodes: list[str],
+    *,
+    layer_bytes: list[int],
+    origin: str,
+    seed: int = 0,
+    max_peers: int = 4,
+    manifest_latency: float = 0.010,
+) -> DistributionPlan:
+    """Each layer forms its own random peer graph rooted at the origin.
+
+    Every node fetches every layer; the source for (node, layer) is a random
+    earlier peer in that layer's join order (or the origin for the first
+    ``max_peers`` nodes).  Because layer trees are independent, a node ends
+    up with inbound+outbound edges across many trees — the all-to-all mesh
+    the paper argues overwhelms 1 Gbps NICs.  The origin additionally
+    coordinates every (node, layer) announce — serialized on its CPU by the
+    simulator (``SimConfig.coordinator_cost_s``) — so it is both data seeder
+    and metadata bottleneck.
+    """
+    rng = random.Random(seed)
+    flows = []
+    coordinator = {}
+    for li, lb in enumerate(layer_bytes):
+        order = list(nodes)
+        rng.shuffle(order)  # per-layer join order differs → overlapping trees
+        for i, n in enumerate(order):
+            if i == 0:
+                src = origin
+            else:
+                src = order[rng.randrange(max(0, i - max_peers), i)]
+            flows.append(Flow(src, n, f"layer{li}", lb))
+        for n in order:
+            coordinator[n] = origin
+    control = {n: manifest_latency for n in nodes}
+    return DistributionPlan(
+        flows=flows, control_latency=control, coordinator=coordinator, streaming=False
+    )
+
+
+# ----------------------------------------------------------------------
+# DADI + P2P: single tree, resource-constrained root doing double duty
+# ----------------------------------------------------------------------
+def dadi_plan(
+    nodes: list[str],
+    *,
+    image_bytes: int,
+    root: str,
+    fanout: int = 4,
+    startup_fraction: float = 1.0,
+    manifest_latency: float = 0.010,
+) -> DistributionPlan:
+    """Static tree rooted at a dedicated VM; root also manages the topology.
+
+    DADI's tree has higher fan-out and is not rebalanced; the root VM pays a
+    serialized coordination cost for every joining node (paper §4.3: 'the
+    root VM ... is responsible for a series of extra tasks such as
+    layer-tree topology establishment and coordination'), applied via
+    ``SimConfig.coordinator_cost_s``.
+    """
+    need = int(image_bytes * startup_fraction)
+    flows = [Flow(REGISTRY, root, "img", need)]
+    coordinator = {}
+    parents = [root]
+    i = 0
+    for n in nodes:
+        if n == root:
+            continue
+        parent = parents[i // fanout]
+        i += 1
+        flows.append(Flow(parent, n, "img", need))
+        parents.append(n)
+        coordinator[n] = root
+    control = {n: manifest_latency for n in nodes}
+    return DistributionPlan(
+        flows=flows, control_latency=control, coordinator=coordinator, streaming=True
+    )

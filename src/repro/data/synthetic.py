@@ -1,0 +1,77 @@
+"""Synthetic batch generation shared by smoke tests, examples and dry-runs.
+
+``make_batch`` builds a real (materialized) batch for a config+shape on the
+host; ``batch_specs`` builds the matching ShapeDtypeStructs for AOT
+lowering (no allocation) — the two must stay in lock-step, which the tests
+assert via jax.eval_shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _text_len(cfg, seq_len: int) -> int:
+    if cfg.vlm is not None:
+        return seq_len - cfg.vlm.n_patches
+    return seq_len
+
+
+def make_batch(cfg, seq_len: int, batch: int, *, kind: str, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    out: dict = {}
+    if kind in ("train", "prefill"):
+        t_text = _text_len(cfg, seq_len)
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, t_text)), jnp.int32
+        )
+        if cfg.vlm is not None:
+            out["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.vlm.n_patches, cfg.vlm.d_vision)),
+                jnp.bfloat16,
+            )
+        if cfg.encdec is not None:
+            e = cfg.encdec
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((batch, e.encoder_ctx, e.d_frontend)),
+                jnp.bfloat16,
+            )
+        if kind == "train":
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq_len)), jnp.int32
+            )
+    else:  # decode
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32
+        )
+        out["pos"] = jnp.asarray(seq_len - 1, jnp.int32)
+    return out
+
+
+def batch_specs(cfg, seq_len: int, batch: int, *, kind: str) -> dict:
+    f32, bf16, i32 = jnp.float32, jnp.bfloat16, jnp.int32
+    S = jax.ShapeDtypeStruct
+    out: dict = {}
+    if kind in ("train", "prefill"):
+        t_text = _text_len(cfg, seq_len)
+        out["tokens"] = S((batch, t_text), i32)
+        if cfg.vlm is not None:
+            out["patch_embeds"] = S((batch, cfg.vlm.n_patches, cfg.vlm.d_vision), bf16)
+        if cfg.encdec is not None:
+            e = cfg.encdec
+            out["frames"] = S((batch, e.encoder_ctx, e.d_frontend), bf16)
+        if kind == "train":
+            out["labels"] = S((batch, seq_len), i32)
+    else:
+        out["tokens"] = S((batch, 1), i32)
+        out["pos"] = S((), i32)
+    return out
+
+
+def token_stream(cfg, seq_len: int, batch: int, *, seed: int = 0):
+    """Infinite deterministic token batches for the training examples."""
+    step = 0
+    while True:
+        yield make_batch(cfg, seq_len, batch, kind="train", seed=seed + step)
+        step += 1

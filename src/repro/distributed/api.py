@@ -1,0 +1,55 @@
+"""Sharding context: how model code requests activation shardings.
+
+Model code is mesh-agnostic; it calls ``constrain(x, ("data", None, ...))``
+with *logical* axis names.  Inside a :func:`sharding_context` those names
+are translated to the active mesh's axes (e.g. logical "data" → physical
+("pod", "data") on the multi-pod mesh) and applied with
+``with_sharding_constraint``; outside any context it is a no-op, so tests
+and single-device runs never touch the mesh machinery.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _translate(axis, mapping) -> object:
+    if axis is None:
+        return None
+    phys = mapping.get(axis, ())
+    if phys == ():
+        return None
+    return phys
+
+
+@contextmanager
+def sharding_context(mesh, logical_to_physical: dict[str, tuple[str, ...]]):
+    """Activate activation-constraint translation for model code."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, logical_to_physical)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active_mesh() -> Optional[object]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, mapping = ctx
+    if len(logical) != x.ndim:
+        return x  # shape-polymorphic call sites may not match; skip silently
+    spec = P(*[_translate(a, mapping) for a in logical])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each oracle is the *mathematically direct* formulation — full attention
+matrices, per-step SSM recurrence — with f32 accumulation, so tests compare
+the tiled kernels against an implementation with no shared code or tricks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (BH, T, hd)
+    k: jax.Array,  # (BH, S, hd)
+    v: jax.Array,
+    *,
+    scale: float,
+    window: int | None = None,
+) -> jax.Array:
+    t, s = q.shape[1], k.shape[1]
+    logits = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(t)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bts,bsd->btd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (BH, 1, hd)
+    k: jax.Array,  # (BH, S, hd)
+    v: jax.Array,
+    valid: jax.Array,  # (BH, S) int32
+    *,
+    scale: float,
+) -> jax.Array:
+    logits = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, :] > 0, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bts,bsd->btd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (BH, T, P)
+    dt: jax.Array,  # (BH, T, 1)
+    a: jax.Array,  # (BH, 1)
+    b: jax.Array,  # (BH, T, N)
+    c: jax.Array,  # (BH, T, N)
+) -> jax.Array:
+    """Direct per-step recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    bh, t, p = x.shape
+    n = b.shape[2]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (BH,P), (BH,1), (BH,N), (BH,N)
+        decay = jnp.exp(dtt * a)  # (BH,1)
+        h = decay[..., None] * h + jnp.einsum(
+            "bp,bn->bpn", xt.astype(jnp.float32) * dtt, bt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bpn,bn->bp", h, ct.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((bh, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            x.transpose(1, 0, 2),
+            dt.astype(jnp.float32).transpose(1, 0, 2),
+            b.transpose(1, 0, 2),
+            c.transpose(1, 0, 2),
+        ),
+    )
+    return ys.transpose(1, 0, 2).astype(x.dtype)

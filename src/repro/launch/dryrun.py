@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the appropriate step (train_step / prefill /
+decode) against ShapeDtypeStruct inputs (no allocation), compiles it for
+the production mesh, and records:
+  * memory_analysis()  — proves the cell fits per-device HBM;
+  * cost_analysis()    — HLO FLOPs / bytes for §Roofline;
+  * collective stats   — parsed from the optimized HLO text;
+  * the derived three-term roofline (repro.launch.hlo_analysis).
+
+Run one cell:   python -m repro.launch.dryrun --arch deepseek_7b --shape train_4k --mesh single
+Run everything: python -m repro.launch.dryrun --all --mesh both
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+# per-arch microbatch counts for train_4k (global batch 256) — chosen so
+# per-device activations fit 16 GB HBM with block remat
+N_MICRO = {
+    "stablelm_12b": 8,
+    "deepseek_7b": 8,
+    "gemma3_1b": 16,
+    "internlm2_20b": 16,
+    "jamba_v01_52b": 32,
+    "whisper_medium": 8,
+    "deepseek_moe_16b": 16,
+    "granite_moe_1b": 8,
+    "mamba2_130m": 4,
+    "llava_next_mistral_7b": 8,
+}
+
+
+def _cfg_for(arch: str, kind: str = "train", overrides: dict | None = None):
+    from dataclasses import replace
+
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    # the dry-run lowers the chunked attention path (Pallas cannot lower on
+    # CPU hosts); on real TPUs select attn_impl="pallas".  Decode shapes use
+    # the int8-quantized KV cache (production default; halves HBM residency).
+    kv = "int8" if kind == "decode" else "bf16"
+    # grouped GQA decode is the validated default (§Perf hillclimb B: the
+    # repeat-KV baseline all-gathers the sequence-sharded cache every step)
+    cfg = replace(cfg, attn_impl="chunked", kv_cache_dtype=kv,
+                  gqa_decode="grouped")
+    for key, val in (overrides or {}).items():
+        if "." in key:  # nested, e.g. ssm.chunk=128
+            sub, leaf = key.split(".", 1)
+            cfg = replace(cfg, **{sub: replace(getattr(cfg, sub), **{leaf: val})})
+        else:
+            cfg = replace(cfg, **{key: val})
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, n_micro: int | None = None,
+               overrides: dict | None = None):
+    """Returns (lowered, meta) for one cell."""
+    from repro.configs import SHAPES
+    from repro.data.synthetic import batch_specs
+    from repro.distributed.api import sharding_context
+    from repro.distributed.sharding import ShardingRules
+    from repro.models import model_for
+    from repro.optim.adamw import init_opt_state
+    from repro.train.step import make_train_step
+
+    shape = SHAPES[shape_name]
+    cfg = _cfg_for(arch, shape.kind, overrides)
+    rules = ShardingRules(cfg, mesh)
+    model = model_for(cfg)
+
+    bf16 = jnp.bfloat16
+
+    def bf16_struct(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, bf16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+            ),
+            tree,
+        )
+
+    params_struct = bf16_struct(jax.eval_shape(model.init, jax.random.key(0)))
+    p_shard = rules.params_shardings(params_struct)
+    batch = batch_specs(cfg, shape.seq_len, shape.global_batch, kind=shape.kind)
+    b_shard = rules.batch_shardings(batch)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+
+    with sharding_context(mesh, rules.logical_mapping()):
+        if shape.kind == "train":
+            nm = n_micro or N_MICRO.get(arch, 8)
+            meta["n_micro"] = nm
+            _, train_step = make_train_step(cfg, mesh, n_micro=nm)
+            opt_struct = jax.eval_shape(init_opt_state, params_struct)
+            o_shard = rules.opt_shardings(opt_struct)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params_struct, opt_struct, batch)
+        elif shape.kind == "prefill":
+            def prefill(params, b):
+                return model.prefill(params, b)
+
+            # emitted caches MUST be sharded explicitly: left to XLA they
+            # come out replicated (observed 98 GiB/device on jamba)
+            out_struct = jax.eval_shape(prefill, params_struct, batch)
+            from jax.sharding import PartitionSpec as P
+
+            logits_shape = out_struct[0].shape
+            lspec = rules.batch_spec("logits", logits_shape)
+            if logits_shape[-1] % rules.tp == 0:
+                lspec = P(*(list(lspec)[:-1] + ["model"]))
+            out_sh = (rules.named(lspec), rules.cache_shardings(out_struct[1]))
+            fn = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                         out_shardings=out_sh)
+            lowered = fn.lower(params_struct, batch)
+        else:  # decode
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            c_shard = rules.cache_shardings(cache_struct)
+
+            def decode(params, b, cache):
+                return model.decode_step(params, b, cache)
+
+            fn = jax.jit(
+                decode, in_shardings=(p_shard, b_shard, c_shard),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(params_struct, batch, cache_struct)
+    return lowered, meta, cfg
+
+
+def analyze(lowered, meta: dict, cfg, mesh) -> dict:
+    from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    out = dict(meta)
+    out["compile_s"] = round(compile_s, 2)
+    out["n_devices"] = mesh.devices.size
+
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+        args = out["memory"].get("argument_size_in_bytes", 0)
+        alias = out["memory"].get("alias_size_in_bytes", 0)
+        temp = out["memory"].get("temp_size_in_bytes", 0)
+        outb = out["memory"].get("output_size_in_bytes", 0)
+        out["memory"]["peak_per_device_bytes"] = args + temp + max(outb - alias, 0)
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        out["cost_analysis_raw"] = {  # XLA's numbers: while bodies counted ONCE
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = str(e)
+
+    text = compiled.as_text()
+    hs = analyze_hlo(text)  # while-trip-scaled: the numbers the roofline uses
+    out["cost"] = {"flops": hs.flops, "bytes_accessed": hs.bytes_accessed}
+    out["collectives"] = hs.to_dict()
+
+    # roofline
+    tokens = meta["seq_len"] * meta["global_batch"] if meta["kind"] != "decode" \
+        else meta["global_batch"]
+    n_active = cfg.active_param_count()
+    mult = 6 if meta["kind"] == "train" else 2
+    model_flops = mult * n_active * tokens
+    out["model_flops_basis"] = {
+        "active_params": n_active, "tokens": tokens, "multiplier": mult
+    }
+    if "cost" in out:
+        out["roofline"] = roofline_terms(
+            hlo_flops=out["cost"]["flops"],
+            hlo_bytes=out["cost"]["bytes_accessed"],
+            collective_bytes=hs.collective_bytes,
+            chips=mesh.devices.size,
+            model_flops=model_flops,
+        )
+        if meta["kind"] == "decode" and "memory" in out:
+            # decode is memory-bound by construction: the right roofline
+            # denominator is one pass over the per-device resident state
+            # (param shard + KV/SSM cache shard) = argument bytes.  The
+            # HLO-derived memory term is clamped from below by that ideal
+            # (a step cannot read less than its resident state once), so
+            # the fraction is ≤ 1 by construction.
+            from repro.launch.hlo_analysis import HBM_BW
+
+            r = out["roofline"]
+            ideal_s = out["memory"]["argument_size_in_bytes"] / HBM_BW
+            r["ideal_memory_s"] = ideal_s
+            r["memory_s"] = max(r["memory_s"], ideal_s)
+            terms = {k: r[k] for k in ("compute_s", "memory_s", "collective_s")}
+            r["dominant"] = max(terms, key=terms.get).replace("_s", "")
+            r["bound_s"] = max(terms.values())
+            r["roofline_fraction"] = ideal_s / max(r["bound_s"], 1e-30)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
+             *, n_micro: int | None = None, tag: str = "",
+             overrides: dict | None = None) -> dict:
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    lowered, meta, cfg = lower_cell(arch, shape_name, mesh, n_micro=n_micro,
+                                    overrides=overrides)
+    meta["mesh"] = mesh_kind
+    if overrides:
+        meta["overrides"] = {k: str(v) for k, v in overrides.items()}
+    result = analyze(lowered, meta, cfg, mesh)
+    os.makedirs(outdir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    with open(os.path.join(outdir, name), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (int/float/str), e.g. ssm.chunk=128")
+    args = ap.parse_args()
+
+    from repro.configs import cells
+
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if skip is None]
+    else:
+        todo = [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    overrides = {}
+    for item in args.override:
+        k, v = item.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    failures = []
+    for arch, shape in todo:
+        for mk in meshes:
+            t0 = time.time()
+            try:
+                r = run_cell(arch, shape, mk, args.out,
+                             n_micro=args.n_micro, tag=args.tag,
+                             overrides=overrides or None)
+                roof = r.get("roofline", {})
+                print(
+                    f"OK  {arch:24s} {shape:12s} {mk:6s} "
+                    f"compile={r['compile_s']:7.1f}s "
+                    f"dom={roof.get('dominant', '?'):10s} "
+                    f"frac={roof.get('roofline_fraction', 0):.3f} "
+                    f"mem={r.get('memory', {}).get('peak_per_device_bytes', 0) / 2**30:.2f}GiB",
+                    flush=True,
+                )
+            except Exception as e:
+                failures.append((arch, shape, mk, str(e)))
+                print(f"FAIL {arch} {shape} {mk}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed")
+
+
+if __name__ == "__main__":
+    main()

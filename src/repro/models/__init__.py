@@ -1,0 +1,4 @@
+"""Pure-JAX model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM."""
+from .lm import Model, model_for
+
+__all__ = ["Model", "model_for"]

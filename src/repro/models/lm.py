@@ -1,0 +1,91 @@
+"""Unified model facade: one API across decoder-only and enc-dec families.
+
+``model_for(cfg)`` returns a :class:`Model` with
+  * ``init(key)``                      → params pytree
+  * ``loss(params, batch)``            → (scalar loss, metrics dict)
+  * ``prefill(params, batch)``         → (logits, cache)
+  * ``decode_step(params, batch, cache)`` → (logits, cache)
+  * ``init_cache(batch, max_len)``     → zeroed cache (dry-run stand-in)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softmax_xent
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def _lm_loss(forward, cfg):
+    def loss_fn(params, batch):
+        logits, _, aux = forward(params, cfg, batch, mode="train")
+        labels = batch["labels"]
+        mask = labels >= 0
+        safe = jnp.where(mask, labels, 0)
+        per_tok = softmax_xent(logits, safe, z_loss=cfg.z_loss)
+        denom = jnp.maximum(mask.sum(), 1)
+        ce = jnp.where(mask, per_tok, 0.0).sum() / denom
+        total = ce
+        if cfg.moe is not None:
+            total = total + cfg.moe.aux_loss_weight * aux
+        return total, {"ce": ce, "aux": aux, "tokens": denom}
+
+    return loss_fn
+
+
+def model_for(cfg) -> Model:
+    if cfg.family == "audio":
+        from . import whisper as impl
+
+        fwd = impl.forward
+
+        def init(key):
+            return impl.init_params(key, cfg)
+
+        def prefill(params, batch, cache_len=None):
+            logits, cache, _ = fwd(params, cfg, batch, mode="prefill")
+            return logits, cache
+
+        def decode_step(params, batch, cache):
+            logits, cache, _ = fwd(params, cfg, batch, mode="decode", cache=cache)
+            return logits, cache
+
+        def init_cache(batch, max_len, dtype=jnp.bfloat16):
+            return impl.init_cache(cfg, batch, max_len, dtype)
+
+        return Model(cfg, init, _lm_loss(fwd, cfg), prefill, decode_step, init_cache)
+
+    from . import transformer as impl
+
+    fwd = impl.forward
+
+    def init(key):
+        return impl.init_params(key, cfg)
+
+    def prefill(params, batch, cache_len=None):
+        logits, cache, _ = fwd(params, cfg, batch, mode="prefill",
+                               cache_len=cache_len)
+        return logits, cache
+
+    def decode_step(params, batch, cache):
+        logits, cache, _ = fwd(params, cfg, batch, mode="decode", cache=cache)
+        return logits, cache
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return impl.init_cache(cfg, batch, max_len, dtype)
+
+    return Model(cfg, init, _lm_loss(fwd, cfg), prefill, decode_step, init_cache)

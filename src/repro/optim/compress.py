@@ -1,0 +1,39 @@
+"""Quantized-communication helpers (gradient/weight compression).
+
+The device-side analogue of FaaSNet's block compression (§3.5): trade cheap
+elementwise compute for scarce interconnect bandwidth.  Row-wise symmetric
+int8 with an f32 scale per row — 2× wire reduction on bf16 payloads at
+~1e-2 relative error, which is ample for weight broadcast and for
+error-feedback-compensated gradient all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (..., n) -> (int8 (..., n), f32 scale (...,))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def compress_error_feedback(grad, residual):
+    """Error-feedback int8 compression for gradient all-reduce.
+
+    Returns (quantized payload, new residual).  The caller all-reduces the
+    dequantized payload; the quantization error is fed back into the next
+    step, preserving convergence (Karimireddy et al., 2019).
+    """
+    target = grad + residual
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale).astype(grad.dtype)
+    return deq, target - deq

@@ -1,0 +1,134 @@
+"""Batched serving engine with FaaSNet cold-start integration.
+
+A minimal-but-real continuous-batching server:
+  * requests enter a queue; the batcher packs up to ``max_batch`` prompts
+    (padded to a bucket length) per prefill;
+  * decode proceeds in lockstep for the active batch until each request
+    hits EOS/max_tokens;
+  * **cold start** uses the paper's on-demand path: ``start()`` lazily
+    restores only the leaves needed to begin (embedding + first stage +
+    head) via the block checkpoint, starts serving, and completes the rest
+    of the restore "in the background" (synchronously here, but the fetch
+    statistics show exactly how many bytes the fast path needed — the
+    Fig. 20 measurement on a real model).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import model_for
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (T,) int32
+    max_new_tokens: int = 8
+    out_tokens: list[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+FIRST_LEAF_PRED = (
+    lambda p: p.startswith("embed")
+    or p.startswith("stages/0")
+    or p.startswith("lm_head")
+    or p.startswith("final_norm")
+)
+
+
+class ServeEngine:
+    def __init__(self, cfg, *, max_batch: int = 4, max_len: int = 128) -> None:
+        self.cfg = cfg
+        self.model = model_for(cfg)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.params: Optional[PyTree] = None
+        self.queue: deque[Request] = deque()
+        self.done: list[Request] = []
+        self.cold_start_stats: dict = {}
+        self._rid = 0
+
+    # ------------------------------------------------------------------
+    # Cold start (paper §3.5 on-demand I/O applied to a model checkpoint)
+    # ------------------------------------------------------------------
+    def start(self, ckpt: CheckpointManager, step: int, like: PyTree,
+              *, lazy: bool = True) -> None:
+        t0 = time.monotonic()
+        if lazy:
+            partial_params, finish, reader = ckpt.restore_lazy(
+                step, like, FIRST_LEAF_PRED
+            )
+            t_first = time.monotonic() - t0
+            first_bytes = reader.stats.fetched_compressed
+            self.params = finish()
+            self.cold_start_stats = {
+                "t_first_leaves_s": t_first,
+                "t_full_s": time.monotonic() - t0,
+                "first_fetch_compressed_bytes": first_bytes,
+                "total_fetch_compressed_bytes": reader.stats.fetched_compressed,
+                "read_amplification": reader.stats.amplification(),
+            }
+        else:
+            self.params = ckpt.restore(step, like)
+            self.cold_start_stats = {"t_full_s": time.monotonic() - t0}
+
+    def set_params(self, params: PyTree) -> None:
+        self.params = params
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 8) -> int:
+        self._rid += 1
+        self.queue.append(
+            Request(self._rid, np.asarray(prompt, np.int32), max_new_tokens,
+                    t_submit=time.monotonic())
+        )
+        return self._rid
+
+    def step_batch(self) -> list[Request]:
+        """Serve one batch from the queue to completion. Returns finished."""
+        assert self.params is not None, "engine not started"
+        batch_reqs = [self.queue.popleft()
+                      for _ in range(min(self.max_batch, len(self.queue)))]
+        if not batch_reqs:
+            return []
+        t = max(len(r.prompt) for r in batch_reqs)
+        b = len(batch_reqs)
+        toks = np.zeros((b, t), np.int32)
+        for i, r in enumerate(batch_reqs):
+            toks[i, t - len(r.prompt):] = r.prompt  # left-pad
+        budget = max(r.max_new_tokens for r in batch_reqs)
+        cache_len = t + budget
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache_len=cache_len
+        )
+        last = jnp.argmax(logits[:, -1], axis=-1)
+        now = time.monotonic()
+        for i, r in enumerate(batch_reqs):
+            r.out_tokens.append(int(last[i]))
+            r.t_first_token = now
+        for k in range(1, budget):
+            batch_in = {
+                "tokens": last[:, None].astype(jnp.int32),
+                "pos": jnp.asarray(t + k - 1, jnp.int32),
+            }
+            logits, cache = self.model.decode_step(self.params, batch_in, cache)
+            last = jnp.argmax(logits[:, -1], axis=-1)
+            for i, r in enumerate(batch_reqs):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(last[i]))
+        for r in batch_reqs:
+            r.t_done = time.monotonic()
+        self.done += batch_reqs
+        return batch_reqs

@@ -1,0 +1,22 @@
+"""Discrete-event simulation of FaaSNet provisioning and the paper's baselines."""
+from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
+from .engine import GBPS, FlowSim, NICConfig, SimConfig
+from .traces import iot_trace, synthetic_gaming_trace
+from .workload import ReplayConfig, TickStats, TraceReplay
+
+__all__ = [
+    "SYSTEMS",
+    "WaveConfig",
+    "provision_wave",
+    "scalability_table",
+    "startup_timeline",
+    "GBPS",
+    "FlowSim",
+    "NICConfig",
+    "SimConfig",
+    "iot_trace",
+    "synthetic_gaming_trace",
+    "ReplayConfig",
+    "TickStats",
+    "TraceReplay",
+]

@@ -1,0 +1,200 @@
+"""Provisioning-wave simulation for FaaSNet and the paper's baselines.
+
+``provision_wave`` reproduces the microbenchmark methodology of paper §4.3:
+N concurrent invocations, each creating one container on its own VM, timed
+from request to container-created.  Per-system behaviour and the calibrated
+constants (paper §4.1: 2-CPU / 4 GB / 1 Gbps VMs, 758 MB PyStan image,
+512 KB blocks) live here; EXPERIMENTS.md records the calibration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import FunctionTree, RPCCosts
+from repro.core.topology import (
+    REGISTRY,
+    baseline_plan,
+    dadi_plan,
+    faasnet_plan,
+    kraken_plan,
+    on_demand_plan,
+)
+
+from .engine import GBPS, FlowSim, SimConfig
+
+MB = 1e6
+
+
+@dataclass
+class WaveConfig:
+    """Workload + calibration knobs for one provisioning wave."""
+
+    image_bytes: int = int(758 * MB)  # paper's default PyStan image
+    # Fraction of the image a container must hold before it can start.
+    # Paper Fig. 20: 512 KB blocks give an 83.9 % network-I/O reduction on
+    # the 728 MB Alibaba base image => ~15-16 % fetched.
+    startup_fraction: float = 0.15
+    # App-level per-stream throughput (paper Fig. 16: ~30 MB/s outbound
+    # split across 2 children; ~15 MB/s inbound per stream while seeding,
+    # ~30 MB/s when only fetching).
+    per_stream_cap: float = 30 * MB
+    # Store-and-forward + decompress cost per tree hop (drives the 1.5 s
+    # first-to-last spread of paper Fig. 15).
+    hop_latency: float = 0.2
+    container_start: float = 2.5  # runc + runtime init once blocks are local
+    image_extract_rate: float = 100 * MB  # docker-pull layer extraction
+    n_layers: int = 10  # layer count for layer-granular systems (Kraken)
+    registry_out_cap: float = 9.5 * GBPS
+    # Registry request throttling for block-granular (on-demand) fetchers.
+    registry_qps: float = 1100.0
+    rpc: RPCCosts = field(default_factory=RPCCosts)
+    kraken_coord_s: float = 0.070  # origin CPU per (node, layer) announce
+    dadi_coord_s: float = 0.160  # DADI root CPU per joining node
+    seed: int = 0
+
+
+SYSTEMS = ("faasnet", "baseline", "on_demand", "kraken", "dadi_p2p")
+
+
+def provision_wave(
+    system: str,
+    n: int,
+    cfg: WaveConfig | None = None,
+    *,
+    warm_roots: int = 0,
+    slow_vms: dict[str, float] | None = None,
+    straggler_mitigation: bool = False,
+) -> dict[str, float]:
+    """Provision ``n`` containers concurrently; return vm_id -> latency (s).
+
+    ``warm_roots`` > 0 models the paper's 1→N (rather than 0→N) burst: that
+    many VMs already hold the image and only seed.  ``slow_vms`` injects
+    stragglers (vm_id -> egress cap in bytes/s); with
+    ``straggler_mitigation`` the FT manager demotes a detected slow interior
+    node to a leaf (delete + re-insert) before the wave is planned —
+    FaaSNet's adaptivity applied to stragglers.
+    """
+    cfg = cfg or WaveConfig()
+    nodes = [f"vm{i}" for i in range(n)]
+    coord_cost = {"kraken": cfg.kraken_coord_s, "dadi_p2p": cfg.dadi_coord_s}.get(
+        system, 0.0
+    )
+    sim = FlowSim(
+        SimConfig(
+            registry_out_cap=cfg.registry_out_cap,
+            registry_qps=cfg.registry_qps,
+            per_stream_cap=cfg.per_stream_cap,
+            hop_latency=cfg.hop_latency,
+            coordinator_cost_s=coord_cost,
+        )
+    )
+    for vm, cap in (slow_vms or {}).items():
+        sim.set_slow_vm(vm, cap)
+
+    control = cfg.rpc.control_plane_total()
+    lat: dict[str, float] = {}
+    done_at: dict[str, float] = {}
+
+    def on_done(vm: str, t: float) -> None:
+        done_at[vm] = t
+
+    if system == "faasnet":
+        ft = FunctionTree("f")
+        for i in range(warm_roots):
+            ft.insert(f"warm{i}")
+        for vmid in nodes:
+            ft.insert(vmid)
+        if straggler_mitigation and slow_vms:
+            for vmid in slow_vms:
+                if vmid in ft and ft.children_of(vmid):
+                    ft.delete(vmid)
+                    ft.insert(vmid)  # re-attach at the frontier => leaf
+        plan = faasnet_plan(
+            ft,
+            image_bytes=cfg.image_bytes,
+            startup_fraction=cfg.startup_fraction,
+            manifest_latency=cfg.rpc.manifest_fetch,
+        )
+        # warm roots already have the payload: zero-byte flows
+        plan = _mark_warm(plan, {f"warm{i}" for i in range(warm_roots)})
+        extra = cfg.container_start + cfg.rpc.image_load
+    elif system == "baseline":
+        plan = baseline_plan(nodes, image_bytes=cfg.image_bytes)
+        extra = cfg.container_start + cfg.image_bytes / cfg.image_extract_rate
+    elif system == "on_demand":
+        plan = on_demand_plan(
+            nodes,
+            image_bytes=cfg.image_bytes,
+            startup_fraction=cfg.startup_fraction,
+            manifest_latency=cfg.rpc.manifest_fetch,
+        )
+        extra = cfg.container_start + cfg.rpc.image_load
+    elif system == "kraken":
+        layer = cfg.image_bytes // cfg.n_layers
+        plan = kraken_plan(
+            nodes,
+            layer_bytes=[layer] * cfg.n_layers,
+            origin="origin",
+            seed=cfg.seed,
+        )
+        extra = cfg.container_start + cfg.image_bytes / cfg.image_extract_rate
+    elif system == "dadi_p2p":
+        plan = dadi_plan(
+            nodes,
+            image_bytes=cfg.image_bytes,
+            root="vm0",
+            startup_fraction=cfg.startup_fraction,
+        )
+        extra = cfg.container_start + cfg.rpc.image_load
+    else:
+        raise ValueError(f"unknown system {system!r}; one of {SYSTEMS}")
+
+    sim.add_plan(plan, t0=control, on_node_done=on_done)
+    sim.run()
+    for vm in nodes:
+        if vm not in done_at:  # pragma: no cover - indicates a sim bug
+            raise RuntimeError(f"{system}: {vm} never finished its fetch")
+        lat[vm] = done_at[vm] + extra
+    return lat
+
+
+def _mark_warm(plan, warm: set[str]):
+    """Zero out inbound flows of warm nodes (they already hold the image)."""
+    from repro.core.topology import DistributionPlan, Flow
+
+    flows = [
+        Flow(f.src, f.dst, f.piece, 0 if f.dst in warm else f.bytes)
+        for f in plan.flows
+    ]
+    return DistributionPlan(
+        flows=flows,
+        control_latency=plan.control_latency,
+        coordinator=plan.coordinator,
+        streaming=plan.streaming,
+    )
+
+
+def scalability_table(
+    systems: tuple[str, ...] = SYSTEMS,
+    ns: tuple[int, ...] = (8, 16, 32, 64, 128),
+    cfg: WaveConfig | None = None,
+) -> dict[str, dict[int, dict[str, float]]]:
+    """Paper Figure 14(a): mean/min/max provisioning latency vs concurrency."""
+    out: dict[str, dict[int, dict[str, float]]] = {}
+    for system in systems:
+        out[system] = {}
+        for n in ns:
+            lat = list(provision_wave(system, n, cfg).values())
+            lat.sort()
+            out[system][n] = {
+                "mean": sum(lat) / len(lat),
+                "min": lat[0],
+                "max": lat[-1],
+                "p50": lat[len(lat) // 2],
+            }
+    return out
+
+
+def startup_timeline(system: str, n: int, cfg: WaveConfig | None = None) -> list[float]:
+    """Paper Figure 15: sorted wall-clock start times of the N functions."""
+    return sorted(provision_wave(system, n, cfg).values())

@@ -1,0 +1,267 @@
+"""Deterministic discrete-event fluid-flow network simulator.
+
+Models a pool of VMs (full-duplex NICs with separate in/out capacity), a
+central registry with bounded egress, and a set of data flows produced by a
+:class:`repro.core.topology.DistributionPlan`.  Used to time provisioning
+waves for FaaSNet and the paper's comparison systems, and to replay the
+application-level traces (Figures 11-18).
+
+Rate model (documented approximation)
+-------------------------------------
+At any instant, an active flow's rate is
+
+    rate(f) = min( per_stream_cap,
+                   src_out_cap / #active flows leaving src,
+                   dst_in_cap  / #active flows entering dst,
+                   rate(parent flow)  if f streams behind a parent )
+
+i.e. equal split at each NIC without redistribution of unused shares.  For
+tree topologies every NIC carries ≤1 inbound and ≤2 outbound flows, so the
+split is exact; for registry-centric baselines all flows are symmetric so it
+is exact as well; for the Kraken all-to-all mesh it is mildly pessimistic,
+which matches the paper's qualitative finding.  Streaming children start one
+block-time after their parent and are rate-capped by the parent's inbound
+rate, which bounds the approximation error at ≤ one block-time per hop.
+
+Events are (time, seq) ordered, so runs are bit-deterministic.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.topology import REGISTRY, DistributionPlan, Flow
+
+GBPS = 125e6  # 1 Gbit/s in bytes/s
+
+
+@dataclass
+class NICConfig:
+    in_cap: float = 1.0 * GBPS
+    out_cap: float = 1.0 * GBPS
+
+
+@dataclass
+class SimConfig:
+    vm_nic: NICConfig = field(default_factory=NICConfig)
+    registry_out_cap: float = 5.0 * GBPS  # calibrated to paper §4.3 baselines
+    per_stream_cap: float = float("inf")  # app-level throughput cap per stream
+    block_size: int = 512 * 1024
+    hop_latency: float = 0.0  # store-and-forward + decompress cost per tree hop
+    coordinator_cost_s: float = 0.008  # CPU time a root/origin burns per request
+    decompress_rate: float = 2e9  # bytes/s; >> network, so rarely binding
+    # Registry request throttling (paper §4.3: "image pulls are throttled at
+    # the registry").  Block-granular fetchers issue one range request per
+    # block; the registry serves at most ``registry_qps`` such requests/s,
+    # which caps the aggregate block-mode egress at block_size * qps shared
+    # across the streams currently hitting the registry.
+    registry_qps: float = float("inf")
+
+
+@dataclass
+class _FlowState:
+    flow: Flow
+    remaining: float
+    total: float
+    start_after: float  # control-plane release time
+    parent: Optional["_FlowState"] = None  # streaming dependency
+    started: bool = False
+    done: bool = False
+    t_start: float = math.inf
+    t_done: float = math.inf
+    rate: float = 0.0
+    block_mode: bool = False  # block-granular range requests (registry-throttled)
+    on_done: Optional[Callable[[float], None]] = None
+
+
+class FlowSim:
+    """Simulate one or more distribution plans sharing the same network."""
+
+    def __init__(self, cfg: SimConfig | None = None) -> None:
+        self.cfg = cfg or SimConfig()
+        self.now = 0.0
+        self._flows: list[_FlowState] = []
+        self._events: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
+        self._slow_out: dict[str, float] = {}  # vm_id -> out cap override
+        self.trace: list[tuple[float, str]] = []  # (time, event) log
+
+    # ------------------------------------------------------------------
+    def set_slow_vm(self, vm_id: str, out_cap: float) -> None:
+        """Straggler injection: clamp a VM's egress capacity."""
+        self._slow_out[vm_id] = out_cap
+
+    def clear_slow_vm(self, vm_id: str) -> None:
+        self._slow_out.pop(vm_id, None)
+
+    def schedule(self, t: float, fn: Callable[[], None]) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, fn))
+
+    # ------------------------------------------------------------------
+    def add_plan(
+        self,
+        plan: DistributionPlan,
+        *,
+        t0: float = 0.0,
+        on_node_done: Optional[Callable[[str, float], None]] = None,
+        coordinator_queues: Optional[dict[str, float]] = None,
+    ) -> list[_FlowState]:
+        """Register a provisioning wave starting at ``t0``.
+
+        ``coordinator_queues`` carries serialization state for root/origin
+        coordinators across plans (the Kraken-origin / DADI-root CPU queue).
+        """
+        cfg = self.cfg
+        coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
+        by_dst: dict[str, _FlowState] = {}
+        states: list[_FlowState] = []
+        for fl in plan.flows:
+            release = t0 + plan.control_latency.get(fl.dst, 0.0)
+            # Coordinator serialization: each request queues on the root's CPU.
+            coord = plan.coordinator.get(fl.dst)
+            if coord is not None:
+                q = max(coordinator_queues.get(coord, t0), release)
+                release = q + cfg.coordinator_cost_s
+                coordinator_queues[coord] = release
+            st = _FlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
+                            start_after=release,
+                            block_mode=plan.streaming and fl.src == REGISTRY)
+            states.append(st)
+            # streaming dependency: dst of the parent flow == src of this flow
+            by_dst.setdefault(fl.dst, st)
+        if plan.streaming:
+            block_t = cfg.block_size / cfg.vm_nic.in_cap
+            for st in states:
+                up = by_dst.get(st.flow.src)
+                if up is not None:
+                    st.parent = up
+                    st.start_after = max(st.start_after, t0)  # start gated below
+                    # child may begin one block (+hop cost) after the parent
+                    st._pipeline_delay = block_t + cfg.hop_latency  # type: ignore[attr-defined]
+        for st in states:
+            if on_node_done is not None:
+                dst, total = st.flow.dst, st.flow.bytes
+                st.on_done = (
+                    lambda t, dst=dst: on_node_done(dst, t)
+                )
+            self._flows.append(st)
+            self._arm_start(st)
+        return states
+
+    def _arm_start(self, st: _FlowState) -> None:
+        if st.parent is None:
+            self.schedule(max(st.start_after, self.now), lambda: self._start_flow(st))
+        else:
+            # started when parent starts + one block-time (and own release time)
+            def try_start() -> None:
+                if st.started or st.done:
+                    return
+                p = st.parent
+                if p.started:
+                    delay = getattr(st, "_pipeline_delay", 0.0)
+                    t = max(st.start_after, p.t_start + delay, self.now)
+                    self.schedule(t, lambda: self._start_flow(st))
+                else:
+                    self.schedule(self.now + 1e-4, try_start)  # poll cheaply
+
+            self.schedule(max(st.start_after, self.now), try_start)
+
+    def _start_flow(self, st: _FlowState) -> None:
+        if st.started or st.done:
+            return
+        if st.parent is not None and not st.parent.started:
+            self._arm_start(st)
+            return
+        st.started = True
+        st.t_start = self.now
+
+    # ------------------------------------------------------------------
+    # Rate computation (called after every event)
+    # ------------------------------------------------------------------
+    def _recompute_rates(self) -> None:
+        cfg = self.cfg
+        out_count: dict[str, int] = {}
+        in_count: dict[str, int] = {}
+        active = [f for f in self._flows if f.started and not f.done]
+        for f in active:
+            out_count[f.flow.src] = out_count.get(f.flow.src, 0) + 1
+            in_count[f.flow.dst] = in_count.get(f.flow.dst, 0) + 1
+
+        def out_cap(node: str) -> float:
+            if node == REGISTRY:
+                return cfg.registry_out_cap
+            return self._slow_out.get(node, cfg.vm_nic.out_cap)
+
+        # topological order: parents before children (tree depth is small)
+        def depth(f: _FlowState) -> int:
+            d, p = 0, f.parent
+            while p is not None:
+                d += 1
+                p = p.parent
+            return d
+
+        reg_block_rate = cfg.block_size * cfg.registry_qps  # aggregate bytes/s
+        for f in sorted(active, key=depth):
+            r = min(
+                cfg.per_stream_cap,
+                out_cap(f.flow.src) / out_count[f.flow.src],
+                cfg.vm_nic.in_cap / in_count[f.flow.dst],
+                cfg.decompress_rate,
+            )
+            if f.flow.src == REGISTRY and f.block_mode:
+                r = min(r, reg_block_rate / out_count[REGISTRY])
+            if f.parent is not None and not f.parent.done:
+                r = min(r, f.parent.rate)
+            f.rate = r
+
+    # ------------------------------------------------------------------
+    def run(self, until: float = math.inf) -> float:
+        """Advance until no events remain (or ``until``); returns final time."""
+        while True:
+            self._recompute_rates()
+            # next flow completion at current rates
+            t_next_done = math.inf
+            next_flow: Optional[_FlowState] = None
+            for f in self._flows:
+                if f.started and not f.done and f.rate > 0:
+                    t = self.now + f.remaining / f.rate
+                    if t < t_next_done:
+                        t_next_done, next_flow = t, f
+            t_next_evt = self._events[0][0] if self._events else math.inf
+            t_next = min(t_next_done, t_next_evt)
+            if t_next == math.inf or t_next > until:
+                if until != math.inf and until > self.now:
+                    dt = until - self.now
+                    for f in self._flows:
+                        if f.started and not f.done:
+                            f.remaining = max(0.0, f.remaining - f.rate * dt)
+                    self.now = until
+                return self.now
+            # advance progress linearly to t_next
+            dt = t_next - self.now
+            for f in self._flows:
+                if f.started and not f.done:
+                    f.remaining = max(0.0, f.remaining - f.rate * dt)
+            self.now = t_next
+            if t_next_done <= t_next_evt and next_flow is not None:
+                next_flow.done = True
+                next_flow.remaining = 0.0
+                next_flow.t_done = self.now
+                if next_flow.on_done is not None:
+                    next_flow.on_done(self.now)
+            else:
+                while self._events and self._events[0][0] <= self.now + 1e-12:
+                    _, _, fn = heapq.heappop(self._events)
+                    fn()
+
+    # ------------------------------------------------------------------
+    def completion_times(self) -> dict[str, float]:
+        """dst vm_id -> time its payload finished arriving."""
+        out: dict[str, float] = {}
+        for f in self._flows:
+            if f.done:
+                out[f.flow.dst] = max(out.get(f.flow.dst, 0.0), f.t_done)
+        return out

@@ -1,0 +1,104 @@
+"""Blockstore: roundtrip, on-demand ranges, read amplification (Fig. 20)."""
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BlockReader, read_manifest, write_blockstore
+
+
+def test_roundtrip(tmp_path):
+    payload = os.urandom(1_000_000)
+    path = str(tmp_path / "p.blocks")
+    m = write_blockstore(payload, path, block_size=64 * 1024)
+    assert m.raw_size == len(payload)
+    assert m.n_blocks == -(-len(payload) // (64 * 1024))
+    r = BlockReader(path)
+    assert r.read_all() == payload
+
+
+def test_manifest_reload(tmp_path):
+    payload = b"hello" * 10_000
+    path = str(tmp_path / "p.blocks")
+    m = write_blockstore(payload, path, block_size=8192)
+    m2 = read_manifest(path)
+    assert m2 == m
+
+
+def test_range_read_exact(tmp_path):
+    payload = bytes(range(256)) * 4096  # 1 MiB deterministic
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=32 * 1024)
+    r = BlockReader(path)
+    assert r.read_range(100_000, 50_000) == payload[100_000:150_000]
+    assert r.read_range(0, 1) == payload[:1]
+    assert r.read_range(len(payload) - 7, 7) == payload[-7:]
+
+
+def test_out_of_range_raises(tmp_path):
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(b"x" * 100, path, block_size=64)
+    r = BlockReader(path)
+    with pytest.raises(ValueError):
+        r.read_range(90, 20)
+
+
+def test_on_demand_fetches_only_covering_blocks(tmp_path):
+    payload = os.urandom(1 << 20)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=64 * 1024)  # 16 blocks
+    r = BlockReader(path)
+    r.read_range(0, 1000)  # one block
+    assert r.stats.blocks_fetched == 1
+    r.read_range(60_000, 10_000)  # spans blocks 0-1; block 0 cached
+    assert r.stats.blocks_fetched == 2
+
+
+def test_read_amplification_grows_with_block_size(tmp_path):
+    """Paper Fig. 20: bigger blocks => more useless bytes at range edges."""
+    payload = os.urandom(16 << 20)
+    amps = []
+    for bs in (64 * 1024, 512 * 1024, 2 << 20):
+        path = str(tmp_path / f"p{bs}.blocks")
+        write_blockstore(payload, path, block_size=bs)
+        r = BlockReader(path)
+        # stride > largest block so no read hits a cached block
+        for off in range(0, len(payload) - 1000, 3_000_000):
+            r.read_range(off, 1000)
+        amps.append(r.stats.amplification())
+    assert amps[0] < amps[1] < amps[2]
+
+
+def test_block_cache_counts_network_bytes_once(tmp_path):
+    payload = os.urandom(256 * 1024)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=64 * 1024)
+    r = BlockReader(path)
+    r.read_range(0, 1000)
+    first = r.stats.fetched_compressed
+    r.read_range(500, 1000)  # same block, cached
+    assert r.stats.fetched_compressed == first
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.binary(min_size=1, max_size=200_000),
+    block_size=st.sampled_from([1024, 4096, 65536]),
+)
+def test_roundtrip_property(tmp_path_factory, data, block_size):
+    path = str(tmp_path_factory.mktemp("bs") / "p.blocks")
+    write_blockstore(data, path, block_size=block_size)
+    assert BlockReader(path).read_all() == data
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_arbitrary_range_property(tmp_path_factory, data):
+    payload = data.draw(st.binary(min_size=10, max_size=100_000))
+    path = str(tmp_path_factory.mktemp("bs") / "p.blocks")
+    write_blockstore(payload, path, block_size=4096)
+    r = BlockReader(path)
+    off = data.draw(st.integers(0, len(payload) - 1))
+    ln = data.draw(st.integers(0, len(payload) - off))
+    assert r.read_range(off, ln) == payload[off : off + ln]

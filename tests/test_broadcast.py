@@ -1,0 +1,108 @@
+"""Tree-broadcast schedules: correctness on a forced multi-device CPU mesh.
+
+Runs in a SUBPROCESS because the 8-device XLA_FLAGS must be set before jax
+initializes, and the rest of the suite needs the default single device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import sys, json
+sys.path.insert(0, os.environ['REPRO_SRC'])
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.distributed.broadcast import (
+    tree_broadcast, faasnet_rounds, binomial_rounds, _bcast_body,
+    flatten_pytree, unflatten_pytree)
+
+mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+params = {'a': jnp.arange(640, dtype=jnp.float32).reshape(80, 8) / 1037.0,
+          'b': jnp.arange(10, dtype=jnp.float32) * 0.05}
+flat, spec = flatten_pytree(params, pad_to=4)
+out = {}
+
+# 1) schedule delivers root's bytes to every replica, from garbage
+for sched, info in [('binomial', binomial_rounds(4)),
+                    ('pipelined', faasnet_rounds(4, 4)),
+                    ('naive', None)]:
+    def corrupt_then_bcast(buf, sched=sched, info=info):
+        idx = jax.lax.axis_index(('data',))
+        buf = jnp.where(idx == 0, buf, -7.0)
+        return _bcast_body(buf, axes=('data',), dp=4, schedule=sched,
+                           n_blocks=4, rounds_info=info)
+    outs = jax.shard_map(corrupt_then_bcast, mesh=mesh, in_specs=P(),
+                         out_specs=P('data'), check_vma=False)(
+        jnp.broadcast_to(flat, flat.shape))
+    ok = bool(jnp.allclose(outs.reshape(4, -1), flat[None], atol=0))
+    out[f'{sched}_correct'] = ok
+
+# 2) end-to-end API: identity on replicated params + report sanity
+for sched in ('naive', 'allgather', 'binomial', 'pipelined'):
+    res, rep = tree_broadcast(params, mesh, schedule=sched, n_blocks=4)
+    same = all(np.allclose(np.asarray(x), np.asarray(y), atol=2e-2)
+               for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(res)))
+    out[f'{sched}_identity'] = same
+    out[f'{sched}_serialized'] = rep.serialized_bytes
+    out[f'{sched}_rounds'] = rep.rounds
+
+# 3) compressed broadcast close to exact
+res, rep = tree_broadcast(params, mesh, schedule='pipelined', n_blocks=4,
+                          compress=True)
+err = max(float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+          for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(res)))
+out['compress_max_err'] = err
+out['compress_payload'] = rep.payload_bytes
+
+# 4) faasnet schedule static properties at larger dp
+r16 = faasnet_rounds(16, 32)
+out['dp16_blocks32_rounds'] = len(r16)
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["REPRO_SRC"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_schedules_deliver_from_root(results):
+    for sched in ("binomial", "pipelined", "naive"):
+        assert results[f"{sched}_correct"], sched
+
+
+def test_identity_on_replicated(results):
+    for sched in ("naive", "allgather", "binomial", "pipelined"):
+        assert results[f"{sched}_identity"], sched
+
+
+def test_serialized_bytes_ordering(results):
+    """pipelined ≤ binomial ≤ naive ≤ allgather in serialized link traffic."""
+    assert results["pipelined_serialized"] <= results["binomial_serialized"]
+    assert results["binomial_serialized"] <= results["naive_serialized"]
+    assert results["naive_serialized"] <= results["allgather_serialized"]
+
+
+def test_compressed_broadcast(results):
+    assert results["compress_max_err"] < 2e-2
+    # int8 payload ≈ half the bf16 payload
+    assert results["compress_payload"] < results["pipelined_serialized"]
+
+
+def test_faasnet_round_count(results):
+    """Single-port binary tree: ~2B + O(log dp) rounds for B blocks."""
+    assert results["dp16_blocks32_rounds"] <= 2 * 32 + 2 * 4 + 4

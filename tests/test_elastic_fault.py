@@ -1,0 +1,105 @@
+"""Elastic scaling + fault tolerance control plane."""
+import pytest
+
+from repro.core import FTManager, VMInfo
+from repro.distributed.elastic import ElasticConfig, ElasticCoordinator
+from repro.distributed.fault import (
+    FaultCoordinator,
+    HeartbeatMonitor,
+    StragglerDetector,
+)
+
+
+def test_elastic_join_uses_peers_not_store():
+    ec = ElasticCoordinator(ElasticConfig(payload_bytes=10**9))
+    first = ec.join(now=0.0)
+    assert first.upstream is None  # root hits the central store
+    later = [ec.join(now=float(i)) for i in range(1, 8)]
+    assert all(j.upstream is not None for j in later)
+    assert len(ec.hosts) == 8
+    # tree stays balanced: height = floor(log2(8)) + 1
+    assert later[-1].tree_height == 4
+
+
+def test_elastic_leave_and_fail_repair():
+    ec = ElasticCoordinator()
+    hosts = [ec.join().host for _ in range(10)]
+    ec.leave(hosts[3])
+    ec.fail(hosts[1])
+    ft = ec.mgr.trees[ec.cfg.model_id]
+    ft.check_invariants()
+    assert len(ec.hosts) == 8
+
+
+def test_elastic_mesh_proposal():
+    ec = ElasticCoordinator()
+    for _ in range(10):
+        ec.join()
+    assert ec.propose_mesh(16) == (8, 16)  # largest pow2 <= 10
+    for _ in range(6):
+        ec.join()
+    assert ec.propose_mesh(16) == (16, 16)
+
+
+def test_join_latency_scales_with_payload():
+    small = ElasticCoordinator(ElasticConfig(payload_bytes=10**8))
+    big = ElasticCoordinator(ElasticConfig(payload_bytes=4 * 10**9))
+    small.join(); big.join()
+    a = small.join().provision_latency_s
+    b = big.join().provision_latency_s
+    assert b > a * 5
+
+
+def test_heartbeat_detection():
+    mon = HeartbeatMonitor(timeout_s=5.0)
+    mon.beat("h1", 0.0)
+    mon.beat("h2", 8.0)
+    assert mon.dead_hosts(now=10.0) == ["h1"]
+
+
+def test_straggler_detector_flags_slow_host():
+    det = StragglerDetector(threshold=1.5)
+    for _ in range(10):
+        det.record("fast1", 1.0)
+        det.record("fast2", 1.1)
+        det.record("slow", 3.0)
+    assert det.stragglers() == ["slow"]
+
+
+def test_fault_coordinator_end_to_end():
+    mgr = FTManager()
+    for i in range(6):
+        mgr.add_free_vm(VMInfo(f"h{i}"))
+    for i in range(6):
+        vm = mgr.reserve_vm()
+        mgr.insert("model", vm.vm_id)
+    restarted = []
+    fc = FaultCoordinator(mgr, on_restart=lambda dead: restarted.extend(dead))
+    for i in range(6):
+        fc.monitor.beat(f"h{i}", 0.0)
+    fc.monitor.beat("h2", 0.0)  # h2 stops beating after t=0
+    for i in range(6):
+        if i != 2:
+            fc.monitor.beat(f"h{i}", 20.0)
+    actions = fc.tick(now=25.0)
+    assert actions["dead"] == ["h2"]
+    assert restarted == ["h2"]
+    mgr.trees["model"].check_invariants()
+    assert "h2" not in mgr.trees["model"]
+
+
+def test_fault_coordinator_demotes_straggler():
+    mgr = FTManager()
+    for i in range(7):
+        mgr.add_free_vm(VMInfo(f"h{i}"))
+        mgr.reserve_vm()
+        mgr.insert("model", f"h{i}", now=0.0)
+    fc = FaultCoordinator(mgr)
+    ft = mgr.trees["model"]
+    interior = next(n.vm_id for n in ft.bfs() if n.children())
+    for h in [f"h{i}" for i in range(7)]:
+        fc.detector.record(h, 5.0 if h == interior else 1.0)
+    actions = fc.tick(now=1.0)
+    assert ("model", interior) in actions["demoted"]
+    assert ft.children_of(interior) == []  # now a leaf: stops throttling peers
+    ft.check_invariants()

@@ -1,0 +1,127 @@
+"""FTManager: placement limits, reclaim, failure repair, snapshot sync."""
+import pytest
+
+from repro.core import FTManager, VMInfo
+from repro.core.provisioning import ProvisionState, ProvisionTask, RPCCosts
+
+
+def _mgr(n_vms=10, **kw):
+    m = FTManager(**kw)
+    for i in range(n_vms):
+        m.add_free_vm(VMInfo(f"vm{i}"))
+    return m
+
+
+def test_insert_returns_upstream():
+    m = _mgr()
+    v1 = m.reserve_vm()
+    v2 = m.reserve_vm()
+    assert m.insert("f", v1.vm_id) is None  # root fetches from registry
+    assert m.insert("f", v2.vm_id) == v1.vm_id
+
+
+def test_placement_limit_enforced():
+    m = _mgr(max_functions_per_vm=2)
+    vm = m.reserve_vm()
+    m.insert("f1", vm.vm_id)
+    m.insert("f2", vm.vm_id)
+    with pytest.raises(RuntimeError):
+        m.insert("f3", vm.vm_id)
+
+
+def test_one_tree_per_function():
+    m = _mgr()
+    a, b = m.reserve_vm(), m.reserve_vm()
+    m.insert("f1", a.vm_id)
+    m.insert("f2", a.vm_id)
+    m.insert("f1", b.vm_id)
+    assert len(m.trees["f1"]) == 2
+    assert len(m.trees["f2"]) == 1
+
+
+def test_idle_reclaim_rebalances():
+    m = _mgr(vm_idle_reclaim_s=100)
+    vms = [m.reserve_vm(now=0.0) for _ in range(5)]
+    for v in vms:
+        m.insert("f", v.vm_id, now=0.0)
+    # mark one VM active recently; others idle out
+    m.vms[vms[0].vm_id].last_active = 950.0
+    reclaimed = m.reclaim_idle(now=1000.0)
+    assert set(reclaimed) == {v.vm_id for v in vms[1:]}
+    ft = m.trees["f"]
+    ft.check_invariants()
+    assert len(ft) == 1
+
+
+def test_failure_repairs_all_trees():
+    m = _mgr()
+    vms = [m.reserve_vm() for _ in range(4)]
+    for v in vms:
+        m.insert("f1", v.vm_id)
+        m.insert("f2", v.vm_id)
+    repaired = m.on_vm_failure(vms[1].vm_id)
+    assert sorted(repaired) == ["f1", "f2"]
+    for fid in ("f1", "f2"):
+        m.trees[fid].check_invariants()
+        assert vms[1].vm_id not in m.trees[fid]
+    assert not m.vms[vms[1].vm_id].alive
+
+
+def test_ft_aware_placement_prefers_light_vms():
+    m = _mgr(ft_aware_placement=True)
+    a, b = m.reserve_vm(), m.reserve_vm()
+    m.insert("f1", a.vm_id)
+    m.insert("f1", b.vm_id)
+    m.insert("f2", a.vm_id)  # a now holds 2 functions, b holds 1
+    pick = m.pick_vm_for("f3")
+    assert pick.vm_id == b.vm_id
+
+
+def test_snapshot_restore_roundtrip():
+    m = _mgr()
+    vms = [m.reserve_vm() for _ in range(6)]
+    for v in vms:
+        m.insert("f", v.vm_id)
+    snap = m.snapshot()
+    m2 = FTManager.restore(snap)
+    assert m2.trees["f"].vm_ids() == m.trees["f"].vm_ids()
+    assert m2.free_pool == m.free_pool
+    m2.trees["f"].check_invariants()
+
+
+# ----------------------------------------------------------------------
+# provisioning protocol state machine
+# ----------------------------------------------------------------------
+def test_protocol_happy_path():
+    t = ProvisionTask("f", "vm0")
+    t.step1_insert("vm1", 0.0)
+    t.step2_manifest(0.01)
+    t.step3_ready(0.02)
+    t.step4_create(0.03)
+    t.step7_created(4.0)
+    assert t.state is ProvisionState.CREATED
+    assert t.provisioning_latency() == pytest.approx(4.0)
+
+
+def test_protocol_illegal_transition():
+    t = ProvisionTask("f", "vm0")
+    t.step1_insert(None, 0.0)
+    with pytest.raises(ValueError):
+        t.step4_create(0.1)  # must do manifest + ready first
+
+
+def test_protocol_retry_after_failure():
+    t = ProvisionTask("f", "vm0")
+    t.step1_insert("vm1", 0.0)
+    t.step2_manifest(0.01)
+    t.fail(0.02)
+    t.retry_with("vm2", 1.0)  # tree repaired: new upstream
+    assert t.upstream == "vm2"
+    assert t.state is ProvisionState.INSERTED
+
+
+def test_rpc_costs_total():
+    c = RPCCosts()
+    assert c.control_plane_total() == pytest.approx(
+        3 * c.scheduler_rpc + c.manifest_fetch + c.image_load
+    )

@@ -1,0 +1,146 @@
+"""FunctionTree: unit tests + hypothesis property tests (balance invariant)."""
+import math
+import random
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import FunctionTree
+
+
+def test_insert_first_is_root():
+    ft = FunctionTree("f")
+    ft.insert("a")
+    assert ft.root.vm_id == "a"
+    assert ft.parent_of("a") is None
+    assert ft.height == 1
+
+
+def test_insert_attaches_bfs_first_open_slot():
+    ft = FunctionTree("f")
+    for v in "abcde":
+        ft.insert(v)
+    # complete binary tree: b,c under a; d,e under b
+    assert ft.children_of("a") == ["b", "c"]
+    assert ft.children_of("b") == ["d", "e"]
+    assert ft.height == 3
+
+
+def test_duplicate_insert_raises():
+    ft = FunctionTree("f")
+    ft.insert("a")
+    with pytest.raises(ValueError):
+        ft.insert("a")
+
+
+def test_delete_missing_raises():
+    ft = FunctionTree("f")
+    with pytest.raises(KeyError):
+        ft.delete("zz")
+
+
+def test_delete_root_single():
+    ft = FunctionTree("f")
+    ft.insert("a")
+    ft.delete("a")
+    assert ft.root is None and len(ft) == 0
+
+
+def test_delete_root_promotes_and_balances():
+    ft = FunctionTree("f")
+    for v in "abcdefg":
+        ft.insert(v)
+    ft.delete("a")
+    ft.check_invariants()
+    assert "a" not in ft
+    assert len(ft) == 6
+
+
+def test_delete_interior_rebalances():
+    ft = FunctionTree("f")
+    for i in range(20):
+        ft.insert(f"v{i}")
+    for victim in ("v1", "v2", "v5", "v0"):
+        ft.delete(victim)
+        ft.check_invariants()
+    assert len(ft) == 16
+
+
+def test_height_logarithmic_after_inserts():
+    ft = FunctionTree("f")
+    for i in range(1000):
+        ft.insert(f"v{i}")
+    ft.check_invariants()
+    assert ft.height == math.floor(math.log2(1000)) + 1  # complete tree
+
+
+def test_edges_match_parents():
+    ft = FunctionTree("f")
+    for i in range(50):
+        ft.insert(f"v{i}")
+    for parent, child in ft.edges():
+        assert ft.parent_of(child) == parent
+
+
+def test_serialization_roundtrip():
+    ft = FunctionTree("fid")
+    for i in range(33):
+        ft.insert(f"v{i}")
+    ft.delete("v7")
+    d = ft.to_dict()
+    ft2 = FunctionTree.from_dict(d)
+    ft2.check_invariants()
+    assert ft2.vm_ids() == ft.vm_ids()
+    assert ft2.height == ft.height
+
+
+def test_rotations_preserve_membership():
+    random.seed(7)
+    ft = FunctionTree("f")
+    alive = []
+    for i in range(200):
+        v = f"v{i}"
+        ft.insert(v)
+        alive.append(v)
+    random.shuffle(alive)
+    for v in alive[:150]:
+        ft.delete(v)
+        ft.check_invariants()
+    remaining = set(alive[150:])
+    assert set(ft.vm_ids()) == remaining
+
+
+# ----------------------------------------------------------------------
+# hypothesis: the AVL height invariant survives any insert/delete sequence
+# ----------------------------------------------------------------------
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 40)), max_size=120))
+def test_invariants_under_random_ops(ops):
+    ft = FunctionTree("f")
+    live: list[str] = []
+    counter = 0
+    for is_insert, idx in ops:
+        if is_insert or not live:
+            v = f"n{counter}"
+            counter += 1
+            ft.insert(v)
+            live.append(v)
+        else:
+            v = live.pop(idx % len(live))
+            ft.delete(v)
+        ft.check_invariants()
+    assert sorted(ft.vm_ids()) == sorted(live)
+    if live:
+        # AVL height bound: h <= 1.4405 log2(n+2)
+        assert ft.height <= 1.4405 * math.log2(len(live) + 2) + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 300))
+def test_bfs_first_slot_keeps_completeness(n):
+    ft = FunctionTree("f")
+    for i in range(n):
+        ft.insert(f"v{i}")
+    assert ft.height == math.floor(math.log2(n)) + 1

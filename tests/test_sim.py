@@ -1,0 +1,94 @@
+"""Simulator: paper-calibrated behaviour, determinism, straggler handling."""
+import statistics as st
+
+from repro.sim import SYSTEMS, FlowSim, SimConfig, WaveConfig, provision_wave
+from repro.core.topology import REGISTRY, DistributionPlan, Flow
+
+
+def test_faasnet_scales_flat():
+    """Paper Fig. 14: FaaSNet keeps near-identical latency from 8 to 128."""
+    cfg = WaveConfig()
+    l8 = st.mean(provision_wave("faasnet", 8, cfg).values())
+    l128 = st.mean(provision_wave("faasnet", 128, cfg).values())
+    assert l128 / l8 < 1.25
+
+
+def test_system_ordering_at_128():
+    """FaaSNet < DADI+P2P < on-demand < baseline ~ Kraken (paper §4.3)."""
+    cfg = WaveConfig()
+    mean = {s: st.mean(provision_wave(s, 128, cfg).values()) for s in SYSTEMS}
+    assert mean["faasnet"] < mean["dadi_p2p"] < mean["on_demand"]
+    assert mean["on_demand"] < mean["baseline"]
+    assert mean["faasnet"] * 5 < mean["kraken"]
+
+
+def test_headline_speedups():
+    """Paper abstract: 13.4x vs baseline, 16.3x vs Kraken (±40% tolerance)."""
+    cfg = WaveConfig()
+    f = st.mean(provision_wave("faasnet", 128, cfg).values())
+    b = st.mean(provision_wave("baseline", 128, cfg).values())
+    k = max(provision_wave("kraken", 128, cfg).values())
+    assert 8.0 < b / f < 19.0  # paper: 13.4x
+    assert 9.0 < k / f < 23.0  # paper: 16.3x (wall-clock based)
+
+
+def test_warm_roots_skip_registry():
+    """With >=1 warm seed the registry is never touched (paper §3.4)."""
+    cfg = WaveConfig()
+    lat = provision_wave("faasnet", 64, cfg, warm_roots=1)
+    assert max(lat.values()) < 12.0
+
+
+def test_determinism():
+    cfg = WaveConfig()
+    a = provision_wave("kraken", 32, cfg)
+    b = provision_wave("kraken", 32, cfg)
+    assert a == b
+
+
+def test_straggler_mitigation_improves_tail():
+    cfg = WaveConfig()
+    slow = {"vm1": 2e6}  # 2 MB/s egress: vm1 throttles its whole subtree
+    base = provision_wave("faasnet", 64, cfg, slow_vms=dict(slow))
+    mitigated = provision_wave(
+        "faasnet", 64, cfg, slow_vms=dict(slow), straggler_mitigation=True
+    )
+    assert max(mitigated.values()) < max(base.values()) * 0.6
+
+
+def test_flow_sim_conservation():
+    """A single flow finishes in exactly bytes/rate seconds."""
+    sim = FlowSim(SimConfig(per_stream_cap=10e6))
+    done = {}
+    sim.add_plan(
+        DistributionPlan(flows=[Flow(REGISTRY, "a", "img", 100_000_000)],
+                         streaming=False),
+        on_node_done=lambda vm, t: done.setdefault(vm, t),
+    )
+    sim.run()
+    assert abs(done["a"] - 10.0) < 1e-6
+
+
+def test_nic_sharing():
+    """Two flows into one dst split the inbound NIC."""
+    sim = FlowSim(SimConfig())
+    done = {}
+    plan = DistributionPlan(
+        flows=[Flow("s1", "dst", "a", 125_000_000), Flow("s2", "dst", "b", 125_000_000)],
+        streaming=False,
+    )
+    sim.add_plan(plan, on_node_done=lambda vm, t: done.setdefault(vm, t))
+    sim.run()
+    # 250 MB over a 125 MB/s NIC shared by two flows => 2 s
+    assert abs(sim.now - 2.0) < 1e-6
+
+
+def test_run_until_preserves_progress():
+    sim = FlowSim(SimConfig(per_stream_cap=10e6))
+    sim.add_plan(
+        DistributionPlan(flows=[Flow(REGISTRY, "a", "img", 100_000_000)],
+                         streaming=False)
+    )
+    for t in range(1, 11):
+        sim.run(until=float(t))
+    assert sim.completion_times()["a"] == 10.0
