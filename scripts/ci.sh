@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 test invocation — CI and humans run exactly this.
+#
+#   scripts/ci.sh                 fast suite (the tier-1 gate)
+#   scripts/ci.sh --runslow       also run the 1000-VM scale tests
+#   scripts/ci.sh tests/test_sim.py -k determinism   any pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,53 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+The code targets the modern jax API (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``); older jax releases (< 0.5) ship the
+same functionality as ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and a ``make_mesh`` without ``axis_types``.  Importing
+``shard_map`` / ``make_mesh`` from here works on both, so the test suite and
+dryruns run on whichever jax the container bakes in.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # jax >= 0.5: top-level export, replication check kwarg is check_vma
+    from jax import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_vma"
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the old/new replication-check kwarg papered over."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KWARG: check_vma},
+    )
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...], **kwargs: Any):
+    """``jax.make_mesh`` requesting Auto axis types where supported."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            **kwargs,
+        )
+    except (AttributeError, TypeError):  # pragma: no cover - older jax
+        return jax.make_mesh(shape, axes, **kwargs)
+
+
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-less mesh: new jax takes (shape, names); old takes name/size pairs."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:  # pragma: no cover - older jax
+        return AbstractMesh(tuple(zip(axes, shape)))

@@ -1,12 +1,12 @@
-"""FaaSNet core: function trees, FT manager, block store, topologies, protocol."""
-from .blockstore import (
-    DEFAULT_BLOCK_SIZE,
-    BlockManifest,
-    BlockReader,
-    ReadStats,
-    read_manifest,
-    write_blockstore,
-)
+"""FaaSNet core: function trees, FT manager, block store, topologies, protocol.
+
+The blockstore symbols are re-exported lazily (PEP 562) so that importing
+``repro.core`` — which every control-plane and simulator module does — never
+drags in the compression stack.  ``repro.core.blockstore`` itself degrades
+gracefully to a zlib codec when ``zstandard`` is missing, but keeping the
+import lazy means a bare interpreter pays nothing unless it actually touches
+blockstore functionality.
+"""
 from .ft_manager import FTManager, VMInfo
 from .function_tree import FTNode, FunctionTree
 from .provisioning import ProvisionState, ProvisionTask, RPCCosts
@@ -20,6 +20,28 @@ from .topology import (
     kraken_plan,
     on_demand_plan,
 )
+
+_BLOCKSTORE_EXPORTS = (
+    "DEFAULT_BLOCK_SIZE",
+    "BlockManifest",
+    "BlockReader",
+    "ReadStats",
+    "read_manifest",
+    "write_blockstore",
+)
+
+
+def __getattr__(name: str):
+    if name in _BLOCKSTORE_EXPORTS:
+        from . import blockstore
+
+        return getattr(blockstore, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__() -> list[str]:
+    return sorted(list(globals()) + list(_BLOCKSTORE_EXPORTS))
+
 
 __all__ = [
     "DEFAULT_BLOCK_SIZE",

@@ -1,11 +1,11 @@
 """I/O-efficient block format with on-demand fetch (paper §3.5).
 
 Original payload (a container image in the paper; a checkpoint shard / code
-package here) is split into fixed-size blocks, each compressed *separately*
-with zstd, and written back-to-back.  An offset table records where each
-compressed block begins, so a reader can satisfy an arbitrary ``(offset,
-length)`` range request by touching only ``ceil`` of the covering blocks —
-the on-demand I/O mechanism.  Reads must align to block boundaries, which
+package here) is split into fixed-size blocks, each compressed *separately*,
+and written back-to-back.  An offset table records where each compressed
+block begins, so a reader can satisfy an arbitrary ``(offset, length)``
+range request by touching only ``ceil`` of the covering blocks — the
+on-demand I/O mechanism.  Reads must align to block boundaries, which
 causes bounded *read amplification* at the two ends of the range (paper
 §4.6); :meth:`BlockReader.read_range` reports both useful and fetched bytes
 so benchmarks can reproduce Figure 20.
@@ -15,6 +15,13 @@ Layout of a blockstore file::
     [magic u32][version u32][block_size u64][n_blocks u64][raw_size u64]
     [offset table: (n_blocks + 1) * u64]          # offsets into data area
     [compressed block 0][compressed block 1]...
+
+Compression codec: zstd when the ``zstandard`` package is available (the
+paper's production choice), with a pure-stdlib ``zlib`` fallback so the
+format — and everything layered on it — works on a bare interpreter.  The
+codec is encoded in the header ``version`` field (1 = zstd, 2 = zlib), so
+readers always know how a file was written; reading a zstd file without
+``zstandard`` installed raises a clear error instead of corrupt output.
 
 The format is used by three layers:
   * ``checkpoint/`` — every checkpoint shard is a blockstore file;
@@ -27,15 +34,76 @@ from __future__ import annotations
 import io
 import os
 import struct
-from dataclasses import dataclass
+import zlib
+from dataclasses import dataclass, field
 
-import zstandard as zstd
+try:  # optional: zstd is the production codec, zlib the stdlib fallback
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    _zstd = None
 
 MAGIC = 0xFAA5_0001
-VERSION = 1
+# Header ``version`` doubles as the codec id so old files stay readable.
+VERSION_ZSTD = 1
+VERSION_ZLIB = 2
+VERSION = VERSION_ZSTD  # kept for backwards compatibility of the constant
 DEFAULT_BLOCK_SIZE = 512 * 1024  # paper's production setting (512 KB)
 
+_CODEC_BY_VERSION = {VERSION_ZSTD: "zstd", VERSION_ZLIB: "zlib"}
+_VERSION_BY_CODEC = {v: k for k, v in _CODEC_BY_VERSION.items()}
+
 _HEADER = struct.Struct("<IIQQQ")
+
+
+def have_zstd() -> bool:
+    return _zstd is not None
+
+
+def default_codec() -> str:
+    return "zstd" if _zstd is not None else "zlib"
+
+
+class _ZstdCodec:
+    name = "zstd"
+
+    def __init__(self, level: int = 3) -> None:
+        if _zstd is None:
+            raise RuntimeError(
+                "file requires the 'zstandard' package (codec zstd), which is "
+                "not installed; re-write the payload with codec='zlib'"
+            )
+        self._c = _zstd.ZstdCompressor(level=level)
+        self._d = _zstd.ZstdDecompressor()
+
+    def compress(self, data: bytes) -> bytes:
+        return self._c.compress(data)
+
+    def decompress(self, data: bytes, raw_size: int) -> bytes:
+        return self._d.decompress(data, max_output_size=raw_size)
+
+
+class _ZlibCodec:
+    name = "zlib"
+
+    def __init__(self, level: int = 6) -> None:
+        self._level = min(max(level, 0), 9)
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self._level)
+
+    def decompress(self, data: bytes, raw_size: int) -> bytes:
+        out = zlib.decompress(data, bufsize=max(raw_size, 1))
+        if len(out) > raw_size:
+            raise ValueError(f"block decompressed to {len(out)} > {raw_size} bytes")
+        return out
+
+
+def _make_codec(name: str, level: int):
+    if name == "zstd":
+        return _ZstdCodec(level)
+    if name == "zlib":
+        return _ZlibCodec(level)
+    raise ValueError(f"unknown blockstore codec {name!r}")
 
 
 @dataclass(frozen=True)
@@ -51,6 +119,7 @@ class BlockManifest:
     n_blocks: int
     raw_size: int
     offsets: tuple[int, ...]  # n_blocks + 1 entries into the data area
+    codec: str = field(default="zstd", compare=False)
 
     def compressed_size(self) -> int:
         return self.offsets[-1]
@@ -78,11 +147,18 @@ class BlockManifest:
             "n_blocks": self.n_blocks,
             "raw_size": self.raw_size,
             "offsets": list(self.offsets),
+            "codec": self.codec,
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "BlockManifest":
-        return cls(d["block_size"], d["n_blocks"], d["raw_size"], tuple(d["offsets"]))
+        return cls(
+            d["block_size"],
+            d["n_blocks"],
+            d["raw_size"],
+            tuple(d["offsets"]),
+            d.get("codec", "zstd"),
+        )
 
 
 def write_blockstore(
@@ -91,9 +167,14 @@ def write_blockstore(
     *,
     block_size: int = DEFAULT_BLOCK_SIZE,
     level: int = 3,
+    codec: str | None = None,
 ) -> BlockManifest:
-    """Convert ``payload`` into the I/O-efficient format (gateway's job, §3.1)."""
-    cctx = zstd.ZstdCompressor(level=level)
+    """Convert ``payload`` into the I/O-efficient format (gateway's job, §3.1).
+
+    ``codec`` defaults to zstd when available, else the stdlib zlib fallback.
+    """
+    codec = codec or default_codec()
+    cctx = _make_codec(codec, level)
     n_blocks = max(1, -(-len(payload) // block_size))
     blocks = [
         cctx.compress(payload[i * block_size : (i + 1) * block_size])
@@ -102,10 +183,14 @@ def write_blockstore(
     offsets = [0]
     for b in blocks:
         offsets.append(offsets[-1] + len(b))
-    manifest = BlockManifest(block_size, n_blocks, len(payload), tuple(offsets))
+    manifest = BlockManifest(block_size, n_blocks, len(payload), tuple(offsets), codec)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(_HEADER.pack(MAGIC, VERSION, block_size, n_blocks, len(payload)))
+        f.write(
+            _HEADER.pack(
+                MAGIC, _VERSION_BY_CODEC[codec], block_size, n_blocks, len(payload)
+            )
+        )
         f.write(struct.pack(f"<{n_blocks + 1}Q", *offsets))
         for b in blocks:
             f.write(b)
@@ -120,10 +205,12 @@ def read_manifest(path: str) -> BlockManifest:
         )
         if magic != MAGIC:
             raise ValueError(f"{path}: not a blockstore file (magic {magic:#x})")
-        if version != VERSION:
+        if version not in _CODEC_BY_VERSION:
             raise ValueError(f"{path}: unsupported version {version}")
         offsets = struct.unpack(f"<{n_blocks + 1}Q", f.read(8 * (n_blocks + 1)))
-    return BlockManifest(block_size, n_blocks, raw_size, tuple(offsets))
+    return BlockManifest(
+        block_size, n_blocks, raw_size, tuple(offsets), _CODEC_BY_VERSION[version]
+    )
 
 
 @dataclass
@@ -152,7 +239,7 @@ class BlockReader:
         self.manifest = manifest or read_manifest(path)
         self._data_start = _HEADER.size + 8 * (self.manifest.n_blocks + 1)
         self._cache: dict[int, bytes] = {}
-        self._dctx = zstd.ZstdDecompressor()
+        self._codec = _make_codec(self.manifest.codec, 0)
         self.stats = ReadStats()
 
     # -- block-level -----------------------------------------------------
@@ -167,9 +254,7 @@ class BlockReader:
         if i in self._cache:
             return self._cache[i]
         comp = self.fetch_block_compressed(i)
-        raw = self._dctx.decompress(
-            comp, max_output_size=self.manifest.block_raw_size(i)
-        )
+        raw = self._codec.decompress(comp, self.manifest.block_raw_size(i))
         self._cache[i] = raw
         self.stats.blocks_fetched += 1
         self.stats.fetched_compressed += len(comp)

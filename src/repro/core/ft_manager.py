@@ -113,6 +113,19 @@ class FTManager:
         self.stats["inserts"] += 1
         return ft.parent_of(vm_id)
 
+    def bulk_insert(
+        self, function_id: str, vm_ids: list[str], now: float = 0.0
+    ) -> FunctionTree:
+        """Insert many VMs into one function's FT (burst scale-out).
+
+        Used by the scale harness (``repro.sim.scale``) to stand up the
+        paper's §4.2 thousand-VM waves; semantically identical to calling
+        :meth:`insert` in a loop, returns the tree for convenience.
+        """
+        for vm_id in vm_ids:
+            self.insert(function_id, vm_id, now)
+        return self.trees[function_id]
+
     def delete(self, function_id: str, vm_id: str) -> None:
         ft = self.trees[function_id]
         ft.delete(vm_id)
@@ -194,6 +207,16 @@ class FTManager:
             repaired.append(fid)
         vm.functions.clear()
         return repaired
+
+    # ------------------------------------------------------------------
+    # Telemetry
+    # ------------------------------------------------------------------
+    def tree_stats(self) -> dict[str, dict[str, int]]:
+        """Per-function tree size/height — the scale harness's sanity report."""
+        return {
+            fid: {"size": len(ft), "height": ft.height}
+            for fid, ft in self.trees.items()
+        }
 
     # ------------------------------------------------------------------
     # Metadata-store sync (paper: scheduler shards sync with etcd)

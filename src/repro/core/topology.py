@@ -63,18 +63,21 @@ def faasnet_plan(
     image_bytes: int,
     startup_fraction: float = 1.0,
     manifest_latency: float = 0.010,
+    piece: str = "img",
 ) -> DistributionPlan:
     """Blocks stream down FT edges; root fetches from the registry.
 
     ``startup_fraction`` < 1 models on-demand fetch: only that fraction of
     the payload must arrive before the container can start (§3.5).
+    ``piece`` labels the payload — pass the function id when many FTs share
+    one simulation so flows stay distinguishable in traces and logs.
     """
     need = int(image_bytes * startup_fraction)
     flows = []
     control = {}
     for node in ft.bfs():
         up = ft.parent_of(node.vm_id) or REGISTRY
-        flows.append(Flow(up, node.vm_id, "img", need))
+        flows.append(Flow(up, node.vm_id, piece, need))
         control[node.vm_id] = manifest_latency  # fetch .tar manifest from MDS
     return DistributionPlan(flows=flows, control_latency=control, streaming=True)
 

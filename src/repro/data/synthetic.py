@@ -23,9 +23,13 @@ def make_batch(cfg, seq_len: int, batch: int, *, kind: str, seed: int = 0) -> di
     out: dict = {}
     if kind in ("train", "prefill"):
         t_text = _text_len(cfg, seq_len)
-        out["tokens"] = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, t_text)), jnp.int32
-        )
+        # Additive-walk sequences: x[t+1] = (x[t] + 1) mod V with a random
+        # per-row start.  Marginally uniform over the vocab, but next-token
+        # prediction has real signal, so "loss goes down" tests measure
+        # learning rather than luck (iid labels bound the loss at ln V).
+        start = rng.integers(0, cfg.vocab_size, (batch, 1))
+        seq = (start + np.arange(seq_len + 1)[None, :]) % cfg.vocab_size
+        out["tokens"] = jnp.asarray(seq[:, :t_text], jnp.int32)
         if cfg.vlm is not None:
             out["patch_embeds"] = jnp.asarray(
                 rng.standard_normal((batch, cfg.vlm.n_patches, cfg.vlm.d_vision)),
@@ -38,9 +42,7 @@ def make_batch(cfg, seq_len: int, batch: int, *, kind: str, seed: int = 0) -> di
                 jnp.bfloat16,
             )
         if kind == "train":
-            out["labels"] = jnp.asarray(
-                rng.integers(0, cfg.vocab_size, (batch, seq_len)), jnp.int32
-            )
+            out["labels"] = jnp.asarray(seq[:, 1:], jnp.int32)
     else:  # decode
         out["tokens"] = jnp.asarray(
             rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32

@@ -38,8 +38,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 PyTree = Any
 SCHEDULES = ("naive", "allgather", "binomial", "pipelined")

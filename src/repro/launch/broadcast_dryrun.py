@@ -22,8 +22,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def run_one(arch: str, mesh_kind: str, schedule: str, n_blocks: int,

@@ -116,8 +116,9 @@ def apply_moe(p: PyTree, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     shardable = dp > 1 and n_tok % dp == 0
 
     if shardable:
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
 
         def local_dispatch(xl, router):
             bufl, slotl, gatel, auxl, _ = _dispatch_combine_plan(

@@ -1,6 +1,8 @@
 """Discrete-event simulation of FaaSNet provisioning and the paper's baselines."""
 from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
 from .engine import GBPS, FlowSim, NICConfig, SimConfig
+from .reference import ReferenceFlowSim
+from .scale import ScaleConfig, ScaleResult, run_scale
 from .traces import iot_trace, synthetic_gaming_trace
 from .workload import ReplayConfig, TickStats, TraceReplay
 
@@ -14,6 +16,10 @@ __all__ = [
     "FlowSim",
     "NICConfig",
     "SimConfig",
+    "ReferenceFlowSim",
+    "ScaleConfig",
+    "ScaleResult",
+    "run_scale",
     "iot_trace",
     "synthetic_gaming_trace",
     "ReplayConfig",

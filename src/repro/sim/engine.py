@@ -3,8 +3,9 @@
 Models a pool of VMs (full-duplex NICs with separate in/out capacity), a
 central registry with bounded egress, and a set of data flows produced by a
 :class:`repro.core.topology.DistributionPlan`.  Used to time provisioning
-waves for FaaSNet and the paper's comparison systems, and to replay the
-application-level traces (Figures 11-18).
+waves for FaaSNet and the paper's comparison systems, to replay the
+application-level traces (Figures 11-18), and — via ``repro.sim.scale`` —
+to reproduce the paper's §4.2 1000-VM burst at full size.
 
 Rate model (documented approximation)
 -------------------------------------
@@ -23,7 +24,25 @@ which matches the paper's qualitative finding.  Streaming children start one
 block-time after their parent and are rate-capped by the parent's inbound
 rate, which bounds the approximation error at ≤ one block-time per hop.
 
-Events are (time, seq) ordered, so runs are bit-deterministic.
+Incremental-rate engine
+-----------------------
+Under equal split, ``rate(f)`` depends only on (a) the *count* of active
+flows on f's source and destination NICs and (b) the parent flow's rate.  So
+when a flow starts or completes, only the flows sharing one of its two NICs
+— plus, transitively, their streaming descendants — can change rate.  The
+engine keeps per-NIC active-flow registries and a completion heap with
+lazily-invalidated entries (per-flow epoch counters); each event settles and
+re-rates just that dirty closure instead of every active flow, and batches
+all same-timestamp completions into a single settle pass.  ``remaining``
+bytes are settled lazily (per-flow ``t_last``), so an event costs
+O(degree · log F) instead of O(F), turning the previously quadratic run
+into an ~O(F log F) one.
+
+Determinism: events are (time, seq) ordered and every internal registry is
+keyed by a densely-assigned flow id (``fid``), so iteration order — and
+therefore the event log — is bit-reproducible across runs.  The original
+full-recompute engine survives as :class:`repro.sim.reference.ReferenceFlowSim`
+and the two are differential-tested in ``tests/test_scale.py``.
 """
 from __future__ import annotations
 
@@ -60,7 +79,7 @@ class SimConfig:
     registry_qps: float = float("inf")
 
 
-@dataclass
+@dataclass(eq=False)
 class _FlowState:
     flow: Flow
     remaining: float
@@ -73,32 +92,71 @@ class _FlowState:
     t_done: float = math.inf
     rate: float = 0.0
     block_mode: bool = False  # block-granular range requests (registry-throttled)
+    pipeline_delay: float = 0.0  # child start lag behind parent start
     on_done: Optional[Callable[[float], None]] = None
+    fid: int = -1  # dense engine-assigned id; all registries key on it
+    t_last: float = 0.0  # time ``remaining`` was last settled
+    epoch: int = 0  # bumped on every rate change; stale heap entries skip
+    children: list["_FlowState"] = field(default_factory=list)
+    waiters: list["_FlowState"] = field(default_factory=list)  # gated on our start
 
 
 class FlowSim:
     """Simulate one or more distribution plans sharing the same network."""
 
-    def __init__(self, cfg: SimConfig | None = None) -> None:
+    def __init__(self, cfg: SimConfig | None = None, *, record_rates: bool = False) -> None:
         self.cfg = cfg or SimConfig()
         self.now = 0.0
-        self._flows: list[_FlowState] = []
+        self._flows: list[_FlowState] = []  # index == fid
         self._events: list[tuple[float, int, Callable[[], None]]] = []
         self._seq = 0
         self._slow_out: dict[str, float] = {}  # vm_id -> out cap override
         self.trace: list[tuple[float, str]] = []  # (time, event) log
+        # Incremental-rate state ------------------------------------------------
+        self._out: dict[str, dict[int, _FlowState]] = {}  # node -> active out flows
+        self._in: dict[str, dict[int, _FlowState]] = {}  # node -> active in flows
+        self._done_heap: list[tuple[float, int, int]] = []  # (t_finish, fid, epoch)
+        self._pending_dirty: dict[int, _FlowState] = {}
+        # Telemetry -------------------------------------------------------------
+        self.events_processed = 0
+        self.record_rates = record_rates
+        self.rate_log: list[tuple[float, int, float]] = []  # (t, fid, new_rate)
+        self._reg_out_sum = 0.0  # running aggregate registry egress (bytes/s)
+        self.peak_registry_egress = 0.0
 
     # ------------------------------------------------------------------
     def set_slow_vm(self, vm_id: str, out_cap: float) -> None:
         """Straggler injection: clamp a VM's egress capacity."""
         self._slow_out[vm_id] = out_cap
+        for f in self._out.get(vm_id, {}).values():
+            self._pending_dirty[f.fid] = f
 
     def clear_slow_vm(self, vm_id: str) -> None:
         self._slow_out.pop(vm_id, None)
+        for f in self._out.get(vm_id, {}).values():
+            self._pending_dirty[f.fid] = f
 
     def schedule(self, t: float, fn: Callable[[], None]) -> None:
         self._seq += 1
         heapq.heappush(self._events, (t, self._seq, fn))
+
+    def set_parent(self, st: _FlowState, parent: Optional[_FlowState]) -> None:
+        """Attach a streaming dependency, keeping the child index consistent.
+
+        Callers must use this (not ``st.parent = ...``) so that rate changes
+        of the parent propagate to ``st`` through the incremental recompute.
+        """
+        if st.parent is not None:
+            try:
+                st.parent.children.remove(st)
+            except ValueError:  # pragma: no cover - defensive
+                pass
+        st.parent = parent
+        if parent is not None:
+            parent.children.append(st)
+        if st.started and not st.done:
+            # attaching mid-flight changes the parent-rate cap immediately
+            self._pending_dirty[st.fid] = st
 
     # ------------------------------------------------------------------
     def add_plan(
@@ -137,37 +195,31 @@ class FlowSim:
             for st in states:
                 up = by_dst.get(st.flow.src)
                 if up is not None:
-                    st.parent = up
+                    self.set_parent(st, up)
                     st.start_after = max(st.start_after, t0)  # start gated below
                     # child may begin one block (+hop cost) after the parent
-                    st._pipeline_delay = block_t + cfg.hop_latency  # type: ignore[attr-defined]
+                    st.pipeline_delay = block_t + cfg.hop_latency
         for st in states:
             if on_node_done is not None:
-                dst, total = st.flow.dst, st.flow.bytes
+                dst = st.flow.dst
                 st.on_done = (
                     lambda t, dst=dst: on_node_done(dst, t)
                 )
+            st.fid = len(self._flows)
             self._flows.append(st)
             self._arm_start(st)
         return states
 
     def _arm_start(self, st: _FlowState) -> None:
-        if st.parent is None:
-            self.schedule(max(st.start_after, self.now), lambda: self._start_flow(st))
-        else:
-            # started when parent starts + one block-time (and own release time)
-            def try_start() -> None:
-                if st.started or st.done:
-                    return
-                p = st.parent
-                if p.started:
-                    delay = getattr(st, "_pipeline_delay", 0.0)
-                    t = max(st.start_after, p.t_start + delay, self.now)
-                    self.schedule(t, lambda: self._start_flow(st))
-                else:
-                    self.schedule(self.now + 1e-4, try_start)  # poll cheaply
-
-            self.schedule(max(st.start_after, self.now), try_start)
+        if st.parent is not None and not st.parent.started:
+            # Gated on the parent's start: no polling — the parent notifies
+            # its waiters the moment it starts.
+            st.parent.waiters.append(st)
+            return
+        t = max(st.start_after, self.now)
+        if st.parent is not None:
+            t = max(t, st.parent.t_start + st.pipeline_delay)
+        self.schedule(t, lambda: self._start_flow(st))
 
     def _start_flow(self, st: _FlowState) -> None:
         if st.started or st.done:
@@ -177,84 +229,169 @@ class FlowSim:
             return
         st.started = True
         st.t_start = self.now
+        st.t_last = self.now
+        f = st.flow
+        self._out.setdefault(f.src, {})[st.fid] = st
+        self._in.setdefault(f.dst, {})[st.fid] = st
+        self.trace.append((self.now, f"start#{st.fid} {f.src}->{f.dst}/{f.piece}"))
+        # Counts on both NICs changed: every flow sharing them is dirty.
+        for g in self._out[f.src].values():
+            self._pending_dirty[g.fid] = g
+        for g in self._in[f.dst].values():
+            self._pending_dirty[g.fid] = g
+        # Release children that were waiting for this flow to start.
+        for w in st.waiters:
+            if not w.started and not w.done:
+                t = max(w.start_after, st.t_start + w.pipeline_delay, self.now)
+                self.schedule(t, lambda w=w: self._start_flow(w))
+        st.waiters.clear()
 
     # ------------------------------------------------------------------
-    # Rate computation (called after every event)
+    # Incremental rate maintenance
     # ------------------------------------------------------------------
-    def _recompute_rates(self) -> None:
+    def _settle(self, f: _FlowState) -> None:
+        """Bring ``remaining`` up to date at ``self.now`` under the old rate."""
+        if self.now > f.t_last:
+            if f.rate > 0.0:
+                f.remaining = max(0.0, f.remaining - f.rate * (self.now - f.t_last))
+            f.t_last = self.now
+
+    @staticmethod
+    def _depth(f: _FlowState) -> int:
+        d, p = 0, f.parent
+        while p is not None:
+            d += 1
+            p = p.parent
+        return d
+
+    def _recompute(self, dirty: dict[int, _FlowState]) -> None:
+        """Re-rate the dirty closure, parents before streaming children."""
         cfg = self.cfg
-        out_count: dict[str, int] = {}
-        in_count: dict[str, int] = {}
-        active = [f for f in self._flows if f.started and not f.done]
-        for f in active:
-            out_count[f.flow.src] = out_count.get(f.flow.src, 0) + 1
-            in_count[f.flow.dst] = in_count.get(f.flow.dst, 0) + 1
-
-        def out_cap(node: str) -> float:
-            if node == REGISTRY:
-                return cfg.registry_out_cap
-            return self._slow_out.get(node, cfg.vm_nic.out_cap)
-
-        # topological order: parents before children (tree depth is small)
-        def depth(f: _FlowState) -> int:
-            d, p = 0, f.parent
-            while p is not None:
-                d += 1
-                p = p.parent
-            return d
-
         reg_block_rate = cfg.block_size * cfg.registry_qps  # aggregate bytes/s
-        for f in sorted(active, key=depth):
+        wl: list[tuple[int, int]] = []
+        queued: set[int] = set()
+        for f in dirty.values():
+            if f.started and not f.done:
+                heapq.heappush(wl, (self._depth(f), f.fid))
+                queued.add(f.fid)
+        while wl:
+            _, fid = heapq.heappop(wl)
+            queued.discard(fid)
+            f = self._flows[fid]
+            if not f.started or f.done:
+                continue
+            src, dst = f.flow.src, f.flow.dst
+            n_out = len(self._out[src])
+            if src == REGISTRY:
+                cap_out = cfg.registry_out_cap
+            else:
+                cap_out = self._slow_out.get(src, cfg.vm_nic.out_cap)
             r = min(
                 cfg.per_stream_cap,
-                out_cap(f.flow.src) / out_count[f.flow.src],
-                cfg.vm_nic.in_cap / in_count[f.flow.dst],
+                cap_out / n_out,
+                cfg.vm_nic.in_cap / len(self._in[dst]),
                 cfg.decompress_rate,
             )
-            if f.flow.src == REGISTRY and f.block_mode:
-                r = min(r, reg_block_rate / out_count[REGISTRY])
+            if src == REGISTRY and f.block_mode:
+                r = min(r, reg_block_rate / n_out)
             if f.parent is not None and not f.parent.done:
                 r = min(r, f.parent.rate)
-            f.rate = r
+            if r != f.rate:
+                self._settle(f)
+                if src == REGISTRY:
+                    self._reg_out_sum += r - f.rate
+                f.rate = r
+                f.epoch += 1
+                if r > 0.0:
+                    heapq.heappush(
+                        self._done_heap, (f.t_last + f.remaining / r, f.fid, f.epoch)
+                    )
+                if self.record_rates:
+                    self.rate_log.append((self.now, f.fid, r))
+                # A parent-rate change propagates down the streaming chain.
+                for c in f.children:
+                    if c.started and not c.done and c.fid not in queued:
+                        heapq.heappush(wl, (self._depth(c), c.fid))
+                        queued.add(c.fid)
+        if self._reg_out_sum > self.peak_registry_egress:
+            self.peak_registry_egress = self._reg_out_sum
+
+    def _next_completion(self) -> float:
+        """Earliest valid completion time (lazily dropping stale heap entries)."""
+        while self._done_heap:
+            t, fid, epoch = self._done_heap[0]
+            f = self._flows[fid]
+            if f.done or not f.started or epoch != f.epoch:
+                heapq.heappop(self._done_heap)
+                continue
+            return t
+        return math.inf
+
+    def _complete(self, f: _FlowState) -> None:
+        fl = f.flow
+        f.done = True
+        f.remaining = 0.0
+        f.t_done = self.now
+        f.t_last = self.now
+        del self._out[fl.src][f.fid]
+        del self._in[fl.dst][f.fid]
+        if fl.src == REGISTRY:
+            self._reg_out_sum -= f.rate
+        self.events_processed += 1
+        self.trace.append((self.now, f"done#{f.fid} {fl.src}->{fl.dst}/{fl.piece}"))
+        # Freed shares on both NICs + the lifted parent-cap on children.
+        for g in self._out[fl.src].values():
+            self._pending_dirty[g.fid] = g
+        for g in self._in[fl.dst].values():
+            self._pending_dirty[g.fid] = g
+        for c in f.children:
+            if c.started and not c.done:
+                self._pending_dirty[c.fid] = c
 
     # ------------------------------------------------------------------
     def run(self, until: float = math.inf) -> float:
         """Advance until no events remain (or ``until``); returns final time."""
         while True:
-            self._recompute_rates()
-            # next flow completion at current rates
-            t_next_done = math.inf
-            next_flow: Optional[_FlowState] = None
-            for f in self._flows:
-                if f.started and not f.done and f.rate > 0:
-                    t = self.now + f.remaining / f.rate
-                    if t < t_next_done:
-                        t_next_done, next_flow = t, f
-            t_next_evt = self._events[0][0] if self._events else math.inf
-            t_next = min(t_next_done, t_next_evt)
+            if self._pending_dirty:
+                dirty, self._pending_dirty = self._pending_dirty, {}
+                self._recompute(dirty)
+            t_done = self._next_completion()
+            t_evt = self._events[0][0] if self._events else math.inf
+            t_next = min(t_done, t_evt)
             if t_next == math.inf or t_next > until:
                 if until != math.inf and until > self.now:
-                    dt = until - self.now
-                    for f in self._flows:
-                        if f.started and not f.done:
-                            f.remaining = max(0.0, f.remaining - f.rate * dt)
                     self.now = until
+                    for d in self._out.values():
+                        for f in d.values():
+                            self._settle(f)
                 return self.now
-            # advance progress linearly to t_next
-            dt = t_next - self.now
-            for f in self._flows:
-                if f.started and not f.done:
-                    f.remaining = max(0.0, f.remaining - f.rate * dt)
             self.now = t_next
-            if t_next_done <= t_next_evt and next_flow is not None:
-                next_flow.done = True
-                next_flow.remaining = 0.0
-                next_flow.t_done = self.now
-                if next_flow.on_done is not None:
-                    next_flow.on_done(self.now)
+            if t_done <= t_evt:
+                # Batch every completion due at this instant into one settle
+                # pass: mark them all done first, then fire callbacks in
+                # deterministic (time, fid) order, then re-rate the union of
+                # their dirty closures once.
+                batch: list[_FlowState] = []
+                while self._done_heap:
+                    t, fid, epoch = self._done_heap[0]
+                    f = self._flows[fid]
+                    if f.done or not f.started or epoch != f.epoch:
+                        heapq.heappop(self._done_heap)
+                        continue
+                    if t <= self.now:
+                        heapq.heappop(self._done_heap)
+                        batch.append(f)
+                    else:
+                        break
+                for f in batch:
+                    self._complete(f)
+                for f in batch:
+                    if f.on_done is not None:
+                        f.on_done(self.now)
             else:
                 while self._events and self._events[0][0] <= self.now + 1e-12:
                     _, _, fn = heapq.heappop(self._events)
+                    self.events_processed += 1
                     fn()
 
     # ------------------------------------------------------------------

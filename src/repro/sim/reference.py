@@ -1,0 +1,238 @@
+"""Reference full-recompute fluid-flow engine (the pre-incremental design).
+
+This is the original O(F)-work-per-event engine: after *every* event it
+recomputes the rate of *every* active flow and linearly advances every
+flow's remaining bytes.  It is quadratic in the number of flows and far too
+slow for the 1000-VM experiments, but it is trivially correct with respect
+to the documented rate model, so it is kept as the oracle the incremental
+engine (:class:`repro.sim.engine.FlowSim`) is differential-tested against
+(see ``tests/test_scale.py``).
+
+Both engines share :class:`~repro.sim.engine.SimConfig` and expose the same
+public API (``add_plan`` / ``set_parent`` / ``run`` / ``completion_times``)
+plus an optional per-flow rate log (``record_rates=True``) used by the
+equivalence tests.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.topology import REGISTRY, DistributionPlan, Flow
+
+from .engine import SimConfig
+
+
+@dataclass(eq=False)
+class _RefFlowState:
+    flow: Flow
+    remaining: float
+    total: float
+    start_after: float  # control-plane release time
+    parent: Optional["_RefFlowState"] = None  # streaming dependency
+    started: bool = False
+    done: bool = False
+    t_start: float = math.inf
+    t_done: float = math.inf
+    rate: float = 0.0
+    block_mode: bool = False  # block-granular range requests (registry-throttled)
+    pipeline_delay: float = 0.0
+    on_done: Optional[Callable[[float], None]] = None
+    fid: int = -1  # index into the engine's flow list (rate-log key)
+
+
+class ReferenceFlowSim:
+    """Full-recompute oracle: same rate model, O(flows) work per event."""
+
+    def __init__(self, cfg: SimConfig | None = None, *, record_rates: bool = False) -> None:
+        self.cfg = cfg or SimConfig()
+        self.now = 0.0
+        self._flows: list[_RefFlowState] = []
+        self._events: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
+        self._slow_out: dict[str, float] = {}  # vm_id -> out cap override
+        self.trace: list[tuple[float, str]] = []  # (time, event) log
+        self.record_rates = record_rates
+        self.rate_log: list[tuple[float, int, float]] = []  # (t, fid, new_rate)
+
+    # ------------------------------------------------------------------
+    def set_slow_vm(self, vm_id: str, out_cap: float) -> None:
+        """Straggler injection: clamp a VM's egress capacity."""
+        self._slow_out[vm_id] = out_cap
+
+    def clear_slow_vm(self, vm_id: str) -> None:
+        self._slow_out.pop(vm_id, None)
+
+    def schedule(self, t: float, fn: Callable[[], None]) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, fn))
+
+    def set_parent(self, st: _RefFlowState, parent: Optional[_RefFlowState]) -> None:
+        st.parent = parent
+
+    # ------------------------------------------------------------------
+    def add_plan(
+        self,
+        plan: DistributionPlan,
+        *,
+        t0: float = 0.0,
+        on_node_done: Optional[Callable[[str, float], None]] = None,
+        coordinator_queues: Optional[dict[str, float]] = None,
+    ) -> list[_RefFlowState]:
+        """Register a provisioning wave starting at ``t0``."""
+        cfg = self.cfg
+        coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
+        by_dst: dict[str, _RefFlowState] = {}
+        states: list[_RefFlowState] = []
+        for fl in plan.flows:
+            release = t0 + plan.control_latency.get(fl.dst, 0.0)
+            # Coordinator serialization: each request queues on the root's CPU.
+            coord = plan.coordinator.get(fl.dst)
+            if coord is not None:
+                q = max(coordinator_queues.get(coord, t0), release)
+                release = q + cfg.coordinator_cost_s
+                coordinator_queues[coord] = release
+            st = _RefFlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
+                               start_after=release,
+                               block_mode=plan.streaming and fl.src == REGISTRY)
+            states.append(st)
+            # streaming dependency: dst of the parent flow == src of this flow
+            by_dst.setdefault(fl.dst, st)
+        if plan.streaming:
+            block_t = cfg.block_size / cfg.vm_nic.in_cap
+            for st in states:
+                up = by_dst.get(st.flow.src)
+                if up is not None:
+                    st.parent = up
+                    st.start_after = max(st.start_after, t0)  # start gated below
+                    # child may begin one block (+hop cost) after the parent
+                    st.pipeline_delay = block_t + cfg.hop_latency
+        for st in states:
+            if on_node_done is not None:
+                dst = st.flow.dst
+                st.on_done = (
+                    lambda t, dst=dst: on_node_done(dst, t)
+                )
+            st.fid = len(self._flows)
+            self._flows.append(st)
+            self._arm_start(st)
+        return states
+
+    def _arm_start(self, st: _RefFlowState) -> None:
+        if st.parent is None:
+            self.schedule(max(st.start_after, self.now), lambda: self._start_flow(st))
+        else:
+            # started when parent starts + one block-time (and own release time)
+            def try_start() -> None:
+                if st.started or st.done:
+                    return
+                p = st.parent
+                if p.started:
+                    t = max(st.start_after, p.t_start + st.pipeline_delay, self.now)
+                    self.schedule(t, lambda: self._start_flow(st))
+                else:
+                    self.schedule(self.now + 1e-4, try_start)  # poll cheaply
+
+            self.schedule(max(st.start_after, self.now), try_start)
+
+    def _start_flow(self, st: _RefFlowState) -> None:
+        if st.started or st.done:
+            return
+        if st.parent is not None and not st.parent.started:
+            self._arm_start(st)
+            return
+        st.started = True
+        st.t_start = self.now
+
+    # ------------------------------------------------------------------
+    # Rate computation (called after every event)
+    # ------------------------------------------------------------------
+    def _recompute_rates(self) -> None:
+        cfg = self.cfg
+        out_count: dict[str, int] = {}
+        in_count: dict[str, int] = {}
+        active = [f for f in self._flows if f.started and not f.done]
+        for f in active:
+            out_count[f.flow.src] = out_count.get(f.flow.src, 0) + 1
+            in_count[f.flow.dst] = in_count.get(f.flow.dst, 0) + 1
+
+        def out_cap(node: str) -> float:
+            if node == REGISTRY:
+                return cfg.registry_out_cap
+            return self._slow_out.get(node, cfg.vm_nic.out_cap)
+
+        # topological order: parents before children (tree depth is small)
+        def depth(f: _RefFlowState) -> int:
+            d, p = 0, f.parent
+            while p is not None:
+                d += 1
+                p = p.parent
+            return d
+
+        reg_block_rate = cfg.block_size * cfg.registry_qps  # aggregate bytes/s
+        for f in sorted(active, key=depth):
+            r = min(
+                cfg.per_stream_cap,
+                out_cap(f.flow.src) / out_count[f.flow.src],
+                cfg.vm_nic.in_cap / in_count[f.flow.dst],
+                cfg.decompress_rate,
+            )
+            if f.flow.src == REGISTRY and f.block_mode:
+                r = min(r, reg_block_rate / out_count[REGISTRY])
+            if f.parent is not None and not f.parent.done:
+                r = min(r, f.parent.rate)
+            if r != f.rate:
+                f.rate = r
+                if self.record_rates:
+                    self.rate_log.append((self.now, f.fid, r))
+
+    # ------------------------------------------------------------------
+    def run(self, until: float = math.inf) -> float:
+        """Advance until no events remain (or ``until``); returns final time."""
+        while True:
+            self._recompute_rates()
+            # next flow completion at current rates
+            t_next_done = math.inf
+            next_flow: Optional[_RefFlowState] = None
+            for f in self._flows:
+                if f.started and not f.done and f.rate > 0:
+                    t = self.now + f.remaining / f.rate
+                    if t < t_next_done:
+                        t_next_done, next_flow = t, f
+            t_next_evt = self._events[0][0] if self._events else math.inf
+            t_next = min(t_next_done, t_next_evt)
+            if t_next == math.inf or t_next > until:
+                if until != math.inf and until > self.now:
+                    dt = until - self.now
+                    for f in self._flows:
+                        if f.started and not f.done:
+                            f.remaining = max(0.0, f.remaining - f.rate * dt)
+                    self.now = until
+                return self.now
+            # advance progress linearly to t_next
+            dt = t_next - self.now
+            for f in self._flows:
+                if f.started and not f.done:
+                    f.remaining = max(0.0, f.remaining - f.rate * dt)
+            self.now = t_next
+            if t_next_done <= t_next_evt and next_flow is not None:
+                next_flow.done = True
+                next_flow.remaining = 0.0
+                next_flow.t_done = self.now
+                if next_flow.on_done is not None:
+                    next_flow.on_done(self.now)
+            else:
+                while self._events and self._events[0][0] <= self.now + 1e-12:
+                    _, _, fn = heapq.heappop(self._events)
+                    fn()
+
+    # ------------------------------------------------------------------
+    def completion_times(self) -> dict[str, float]:
+        """dst vm_id -> time its payload finished arriving."""
+        out: dict[str, float] = {}
+        for f in self._flows:
+            if f.done:
+                out[f.flow.dst] = max(out.get(f.flow.dst, 0.0), f.t_done)
+        return out

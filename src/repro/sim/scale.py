@@ -1,0 +1,189 @@
+"""Cluster-scale scenario driver: N functions × M VMs in one burst (§4.2).
+
+The paper's headline deployment result is provisioning 2500 function
+containers across 1000 VMs in 8.3 s.  ``run_scale`` reproduces that shape:
+
+  * an :class:`~repro.core.ft_manager.FTManager` owns the VM pool and one
+    FunctionTree per function (placement honours the ≤20 functions/VM
+    production limit);
+  * optional join/leave churn mutates the trees through the manager before
+    the wave is planned (delete → AVL repair → re-insert at the frontier),
+    exercising ``on_reparent`` exactly the way the provisioning layer does;
+  * every function's :func:`~repro.core.topology.faasnet_plan` is added to
+    ONE shared :class:`~repro.sim.engine.FlowSim`, so overlapping FTs
+    contend for per-VM NICs and the registry exactly as in production;
+  * the result reports provisioning makespan, simulator event throughput
+    and peak registry egress — the numbers ``benchmarks/bench_scale_1000.py``
+    writes to ``BENCH_scale.json``.
+
+Runs are bit-deterministic for a fixed :class:`ScaleConfig` (seeded RNG +
+the engine's (time, seq) ordering); ``tests/test_scale.py`` pins that with
+a golden two-run comparison of the full event trace.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+
+from repro.core import FTManager, VMInfo
+from repro.core.topology import faasnet_plan
+
+from .cluster import WaveConfig
+from .engine import FlowSim, SimConfig
+
+
+@dataclass
+class ScaleConfig:
+    """Workload shape + calibration for one cluster-scale burst."""
+
+    n_vms: int = 1000
+    n_functions: int = 5
+    containers_per_function: int = 500  # 5 × 500 = the paper's 2500
+    churn_ops: int = 0  # leave/re-join pairs applied before the wave
+    stagger_s: float = 0.0  # inter-function wave arrival offset
+    seed: int = 0
+    max_functions_per_vm: int = 20  # production placement limit
+    wave: WaveConfig = field(default_factory=WaveConfig)
+
+    def total_containers(self) -> int:
+        return self.n_functions * min(self.containers_per_function, self.n_vms)
+
+
+@dataclass
+class ScaleResult:
+    makespan: float  # sim seconds: last payload fully fetched
+    provision_makespan: float  # + container start + image load
+    per_function: dict[str, float]  # function id -> fetch makespan
+    n_containers: int
+    n_flows: int
+    events: int  # engine events processed
+    wall_s: float  # wall-clock seconds inside FlowSim.run
+    events_per_s: float
+    peak_registry_egress: float  # bytes/s
+    reparents: int  # on_reparent notifications during churn
+    tree_stats: dict[str, dict[str, int]]
+    trace: list  # the engine's (time, event) log — golden-test fodder
+
+
+def _function_ids(cfg: ScaleConfig) -> list[str]:
+    return [f"fn{i}" for i in range(cfg.n_functions)]
+
+
+def build_manager(cfg: ScaleConfig) -> tuple[FTManager, dict[str, list[str]]]:
+    """Stand up the VM pool and one FT per function via the manager API."""
+    if cfg.n_vms < 1 or cfg.n_functions < 1 or cfg.containers_per_function < 1:
+        raise ValueError(
+            f"scale scenario needs >=1 VM, function and container per function "
+            f"(got n_vms={cfg.n_vms}, n_functions={cfg.n_functions}, "
+            f"containers_per_function={cfg.containers_per_function})"
+        )
+    rng = random.Random(cfg.seed)
+    mgr = FTManager(max_functions_per_vm=cfg.max_functions_per_vm)
+    vms = [f"vm{i:04d}" for i in range(cfg.n_vms)]
+    for v in vms:
+        mgr.add_free_vm(VMInfo(v))
+    for _ in vms:  # whole pool reserved for the burst
+        mgr.reserve_vm()
+    members: dict[str, list[str]] = {}
+    per_fn = min(cfg.containers_per_function, cfg.n_vms)
+    for fid in _function_ids(cfg):
+        chosen = rng.sample(vms, per_fn)
+        mgr.bulk_insert(fid, chosen)
+        members[fid] = chosen
+    return mgr, members
+
+
+def apply_churn(mgr: FTManager, members: dict[str, list[str]], cfg: ScaleConfig) -> int:
+    """Leave/re-join churn through the manager; returns reparent count.
+
+    Each op deletes a random member of a random tree (AVL repair fires
+    ``on_reparent`` for every node whose upstream moved) and re-inserts it
+    at the BFS frontier — the paper's VM reclaim + later re-activation.
+    """
+    if cfg.churn_ops <= 0:
+        return 0
+    rng = random.Random(cfg.seed + 1)
+    reparents = 0
+
+    def count(node, new_parent):  # noqa: ANN001 - FunctionTree callback
+        nonlocal reparents
+        reparents += 1
+
+    fids = _function_ids(cfg)
+    for ft in mgr.trees.values():
+        ft.on_reparent.append(count)
+    try:
+        for _ in range(cfg.churn_ops):
+            fid = fids[rng.randrange(len(fids))]
+            vms_in = members[fid]
+            victim = vms_in[rng.randrange(len(vms_in))]
+            mgr.delete(fid, victim)
+            mgr.insert(fid, victim)
+    finally:
+        for ft in mgr.trees.values():
+            if count in ft.on_reparent:
+                ft.on_reparent.remove(count)
+    return reparents
+
+
+def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
+    """Provision ``n_functions`` × ``containers_per_function`` in one burst."""
+    cfg = cfg or ScaleConfig()
+    w = cfg.wave
+    mgr, members = build_manager(cfg)
+    reparents = apply_churn(mgr, members, cfg)
+
+    sim = FlowSim(
+        SimConfig(
+            registry_out_cap=w.registry_out_cap,
+            registry_qps=w.registry_qps,
+            per_stream_cap=w.per_stream_cap,
+            hop_latency=w.hop_latency,
+        )
+    )
+    control = w.rpc.control_plane_total()
+    done_at: dict[tuple[str, str], float] = {}
+    n_flows = 0
+    for i, fid in enumerate(_function_ids(cfg)):
+        plan = faasnet_plan(
+            mgr.trees[fid],
+            image_bytes=w.image_bytes,
+            startup_fraction=w.startup_fraction,
+            manifest_latency=w.rpc.manifest_fetch,
+            piece=fid,
+        )
+        n_flows += len(plan.flows)
+        sim.add_plan(
+            plan,
+            t0=control + i * cfg.stagger_s,
+            on_node_done=lambda vm, t, fid=fid: done_at.setdefault((fid, vm), t),
+        )
+
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+
+    expected = cfg.total_containers()
+    if len(done_at) != expected:  # pragma: no cover - indicates a sim bug
+        raise RuntimeError(
+            f"scale wave incomplete: {len(done_at)}/{expected} containers done"
+        )
+    per_function = {fid: 0.0 for fid in _function_ids(cfg)}
+    for (fid, _vm), t in done_at.items():
+        per_function[fid] = max(per_function[fid], t)
+    makespan = max(per_function.values())
+    return ScaleResult(
+        makespan=makespan,
+        provision_makespan=makespan + w.container_start + w.rpc.image_load,
+        per_function=per_function,
+        n_containers=expected,
+        n_flows=n_flows,
+        events=sim.events_processed,
+        wall_s=wall,
+        events_per_s=sim.events_processed / wall if wall > 0 else float("inf"),
+        peak_registry_egress=sim.peak_registry_egress,
+        reparents=reparents,
+        tree_stats=mgr.tree_stats(),
+        trace=sim.trace,
+    )

@@ -126,7 +126,8 @@ class TraceReplay:
         if streaming and src != REGISTRY and src in self._flow_of:
             up = self._flow_of[src]
             if not up.done:  # type: ignore[attr-defined]
-                states[0].parent = up  # type: ignore[assignment]
+                # registered via the engine so parent rate changes propagate
+                self.sim.set_parent(states[0], up)  # type: ignore[arg-type]
         self._flow_of[vm_id] = states[0]
 
     def _activate(self, vm_id: str, now: float) -> None:

@@ -1,11 +1,23 @@
-"""Blockstore: roundtrip, on-demand ranges, read amplification (Fig. 20)."""
+"""Blockstore: roundtrip, on-demand ranges, read amplification (Fig. 20).
+
+Property-based variants require ``hypothesis`` and are skipped when it is
+absent; deterministic example-based equivalents always run.
+"""
 import os
+import random
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import BlockReader, read_manifest, write_blockstore
+from repro.core.blockstore import default_codec, have_zstd
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
 
 
 def test_roundtrip(tmp_path):
@@ -24,6 +36,31 @@ def test_manifest_reload(tmp_path):
     m = write_blockstore(payload, path, block_size=8192)
     m2 = read_manifest(path)
     assert m2 == m
+    assert m2.codec == default_codec()
+
+
+def test_zlib_codec_roundtrip(tmp_path):
+    """The stdlib fallback codec must roundtrip regardless of zstd presence."""
+    payload = os.urandom(300_000)
+    path = str(tmp_path / "p.blocks")
+    m = write_blockstore(payload, path, block_size=32 * 1024, codec="zlib")
+    assert m.codec == "zlib"
+    assert read_manifest(path).codec == "zlib"
+    assert BlockReader(path).read_all() == payload
+
+
+@pytest.mark.skipif(not have_zstd(), reason="zstandard not installed")
+def test_zstd_codec_roundtrip(tmp_path):
+    payload = os.urandom(300_000)
+    path = str(tmp_path / "p.blocks")
+    m = write_blockstore(payload, path, block_size=32 * 1024, codec="zstd")
+    assert m.codec == "zstd"
+    assert BlockReader(path).read_all() == payload
+
+
+def test_unknown_codec_raises(tmp_path):
+    with pytest.raises(ValueError):
+        write_blockstore(b"x", str(tmp_path / "p.blocks"), codec="lz77")
 
 
 def test_range_read_exact(tmp_path):
@@ -81,24 +118,66 @@ def test_block_cache_counts_network_bytes_once(tmp_path):
     assert r.stats.fetched_compressed == first
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    data=st.binary(min_size=1, max_size=200_000),
-    block_size=st.sampled_from([1024, 4096, 65536]),
-)
-def test_roundtrip_property(tmp_path_factory, data, block_size):
-    path = str(tmp_path_factory.mktemp("bs") / "p.blocks")
-    write_blockstore(data, path, block_size=block_size)
-    assert BlockReader(path).read_all() == data
+# ----------------------------------------------------------------------
+# Deterministic example-based variants of the property tests: always run,
+# even without hypothesis (seeded random, fixed corner cases).
+# ----------------------------------------------------------------------
+def test_roundtrip_examples(tmp_path):
+    rng = random.Random(42)
+    cases = [
+        (b"\x00", 1024),
+        (b"a" * 1023, 1024),
+        (b"b" * 1024, 1024),
+        (b"c" * 1025, 1024),
+        (rng.randbytes(199_999), 4096),
+        (rng.randbytes(65_536), 65536),
+        (bytes(range(256)) * 300, 1024),
+    ]
+    for i, (data, block_size) in enumerate(cases):
+        path = str(tmp_path / f"p{i}.blocks")
+        write_blockstore(data, path, block_size=block_size)
+        assert BlockReader(path).read_all() == data, (i, len(data), block_size)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.data())
-def test_arbitrary_range_property(tmp_path_factory, data):
-    payload = data.draw(st.binary(min_size=10, max_size=100_000))
-    path = str(tmp_path_factory.mktemp("bs") / "p.blocks")
+def test_arbitrary_range_examples(tmp_path):
+    rng = random.Random(7)
+    payload = rng.randbytes(100_000)
+    path = str(tmp_path / "p.blocks")
     write_blockstore(payload, path, block_size=4096)
     r = BlockReader(path)
-    off = data.draw(st.integers(0, len(payload) - 1))
-    ln = data.draw(st.integers(0, len(payload) - off))
-    assert r.read_range(off, ln) == payload[off : off + ln]
+    ranges = [(0, 0), (0, 1), (0, len(payload)), (len(payload) - 1, 1), (4095, 2)]
+    ranges += [
+        (rng.randrange(len(payload)), 0) for _ in range(5)
+    ]
+    for _ in range(40):
+        off = rng.randrange(len(payload))
+        ranges.append((off, rng.randrange(len(payload) - off + 1)))
+    for off, ln in ranges:
+        assert r.read_range(off, ln) == payload[off : off + ln], (off, ln)
+
+
+# ----------------------------------------------------------------------
+# hypothesis property tests (skipped without the package)
+# ----------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        data=st.binary(min_size=1, max_size=200_000),
+        block_size=st.sampled_from([1024, 4096, 65536]),
+    )
+    def test_roundtrip_property(tmp_path_factory, data, block_size):
+        path = str(tmp_path_factory.mktemp("bs") / "p.blocks")
+        write_blockstore(data, path, block_size=block_size)
+        assert BlockReader(path).read_all() == data
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_arbitrary_range_property(tmp_path_factory, data):
+        payload = data.draw(st.binary(min_size=10, max_size=100_000))
+        path = str(tmp_path_factory.mktemp("bs") / "p.blocks")
+        write_blockstore(payload, path, block_size=4096)
+        r = BlockReader(path)
+        off = data.draw(st.integers(0, len(payload) - 1))
+        ln = data.draw(st.integers(0, len(payload) - off))
+        assert r.read_range(off, ln) == payload[off : off + ln]

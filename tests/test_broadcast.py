@@ -18,12 +18,12 @@ sys.path.insert(0, os.environ['REPRO_SRC'])
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.distributed.broadcast import (
     tree_broadcast, faasnet_rounds, binomial_rounds, _bcast_body,
     flatten_pytree, unflatten_pytree)
 
-mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ('data', 'model'))
 params = {'a': jnp.arange(640, dtype=jnp.float32).reshape(80, 8) / 1037.0,
           'b': jnp.arange(10, dtype=jnp.float32) * 0.05}
 flat, spec = flatten_pytree(params, pad_to=4)
@@ -38,8 +38,8 @@ for sched, info in [('binomial', binomial_rounds(4)),
         buf = jnp.where(idx == 0, buf, -7.0)
         return _bcast_body(buf, axes=('data',), dp=4, schedule=sched,
                            n_blocks=4, rounds_info=info)
-    outs = jax.shard_map(corrupt_then_bcast, mesh=mesh, in_specs=P(),
-                         out_specs=P('data'), check_vma=False)(
+    outs = shard_map(corrupt_then_bcast, mesh=mesh, in_specs=P(),
+                     out_specs=P('data'), check_vma=False)(
         jnp.broadcast_to(flat, flat.shape))
     ok = bool(jnp.allclose(outs.reshape(4, -1), flat[None], atol=0))
     out[f'{sched}_correct'] = ok

@@ -1,12 +1,24 @@
-"""FunctionTree: unit tests + hypothesis property tests (balance invariant)."""
+"""FunctionTree: unit tests + invariant property tests (balance invariant).
+
+Two flavours of property testing:
+  * seeded ``random.Random`` churn sequences — always run, no third-party
+    dependency, cover invariants I1-I4 and the ``on_reparent`` contract;
+  * hypothesis variants — run only when ``hypothesis`` is installed.
+"""
 import math
 import random
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
 
 from repro.core import FunctionTree
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
 
 
 def test_insert_first_is_root():
@@ -112,35 +124,137 @@ def test_rotations_preserve_membership():
 
 
 # ----------------------------------------------------------------------
-# hypothesis: the AVL height invariant survives any insert/delete sequence
+# Seeded churn properties (no hypothesis required): invariants I1-I4 and
+# the on_reparent contract survive arbitrary insert/delete interleavings.
 # ----------------------------------------------------------------------
-@settings(max_examples=60, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(st.lists(st.tuples(st.booleans(), st.integers(0, 40)), max_size=120))
-def test_invariants_under_random_ops(ops):
-    ft = FunctionTree("f")
+def _parent_map(ft: FunctionTree) -> dict:
+    return {
+        n.vm_id: (n.parent.vm_id if n.parent is not None else None)
+        for n in ft.bfs()
+    }
+
+
+def _churn_ops(rng: random.Random, n_ops: int, p_insert: float = 0.55):
+    """Yield ('insert', vm) / ('delete', vm) ops over a live set."""
     live: list[str] = []
     counter = 0
-    for is_insert, idx in ops:
-        if is_insert or not live:
+    for _ in range(n_ops):
+        if not live or rng.random() < p_insert:
             v = f"n{counter}"
             counter += 1
-            ft.insert(v)
             live.append(v)
+            yield ("insert", v)
         else:
-            v = live.pop(idx % len(live))
-            ft.delete(v)
-        ft.check_invariants()
-    assert sorted(ft.vm_ids()) == sorted(live)
-    if live:
-        # AVL height bound: h <= 1.4405 log2(n+2)
-        assert ft.height <= 1.4405 * math.log2(len(live) + 2) + 1
+            v = live.pop(rng.randrange(len(live)))
+            yield ("delete", v)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 300))
-def test_bfs_first_slot_keeps_completeness(n):
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 17])
+def test_invariants_under_seeded_churn(seed):
+    rng = random.Random(seed)
     ft = FunctionTree("f")
-    for i in range(n):
+    live: set[str] = set()
+    for op, v in _churn_ops(rng, 400):
+        if op == "insert":
+            ft.insert(v)
+            live.add(v)
+        else:
+            ft.delete(v)
+            live.discard(v)
+        ft.check_invariants()  # I1 pointers, I2 heights, I3 balance, I4 unique
+        if live:
+            # AVL height bound: h <= 1.4405 log2(n+2)
+            assert ft.height <= 1.4405 * math.log2(len(live) + 2) + 1
+    assert set(ft.vm_ids()) == live
+
+
+@pytest.mark.parametrize("seed", [5, 11, 23])
+def test_on_reparent_covers_every_parent_change(seed):
+    """Every node whose parent changed across a delete gets notified.
+
+    This is the contract the provisioning layer depends on: a missed
+    notification would leave a worker streaming from a stale parent.
+    Rotations may additionally notify a node whose parent is transiently
+    moved and then restored, so notified ⊇ changed (not ==) is the
+    guaranteed relation on the *final* state; each individual callback is
+    checked to be accurate at the moment it fires.
+    """
+    rng = random.Random(seed)
+    ft = FunctionTree("f")
+    for op, v in _churn_ops(rng, 300):
+        if op == "insert":
+            ft.insert(v)
+            continue
+        before = _parent_map(ft)
+        notified: set[str] = set()
+
+        def cb(node, new_parent):
+            # accuracy at fire time: the pointer really is the new parent
+            assert node.parent is new_parent
+            notified.add(node.vm_id)
+
+        ft.on_reparent.append(cb)
+        ft.delete(v)
+        ft.on_reparent.remove(cb)
+        after = _parent_map(ft)
+        changed = {u for u in after if before.get(u, "__absent__") != after[u]}
+        assert changed <= notified, (v, changed - notified)
+        assert v not in notified  # the deleted node itself is gone, not moved
+        ft.check_invariants()
+
+
+def test_on_reparent_silent_during_pure_inserts():
+    """BFS-slot insertion into a complete tree never rotates or reparents."""
+    ft = FunctionTree("f")
+    fired: list = []
+    ft.on_reparent.append(lambda node, new_parent: fired.append(node.vm_id))
+    for i in range(128):
         ft.insert(f"v{i}")
-    assert ft.height == math.floor(math.log2(n)) + 1
+    assert fired == []
+
+
+def test_delete_last_bfs_leaf_no_reparent():
+    ft = FunctionTree("f")
+    for v in "abcde":
+        ft.insert(v)
+    fired: list = []
+    ft.on_reparent.append(lambda node, new_parent: fired.append(node.vm_id))
+    ft.delete("e")  # deepest-last leaf: plain unlink, nothing moves
+    assert fired == []
+    ft.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# hypothesis: the AVL height invariant survives any insert/delete sequence
+# ----------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 40)), max_size=120))
+    def test_invariants_under_random_ops(ops):
+        ft = FunctionTree("f")
+        live: list[str] = []
+        counter = 0
+        for is_insert, idx in ops:
+            if is_insert or not live:
+                v = f"n{counter}"
+                counter += 1
+                ft.insert(v)
+                live.append(v)
+            else:
+                v = live.pop(idx % len(live))
+                ft.delete(v)
+            ft.check_invariants()
+        assert sorted(ft.vm_ids()) == sorted(live)
+        if live:
+            # AVL height bound: h <= 1.4405 log2(n+2)
+            assert ft.height <= 1.4405 * math.log2(len(live) + 2) + 1
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 300))
+    def test_bfs_first_slot_keeps_completeness(n):
+        ft = FunctionTree("f")
+        for i in range(n):
+            ft.insert(f"v{i}")
+        assert ft.height == math.floor(math.log2(n)) + 1

@@ -1,21 +1,26 @@
-"""MoE routing invariants (hypothesis) + behavioural checks."""
+"""MoE routing invariants (property + example based) + behavioural checks.
+
+The hypothesis-driven variant runs only when ``hypothesis`` is installed;
+a deterministic sweep over representative shapes always runs.
+"""
+import random
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.models.moe import route_topk
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
 
-@settings(max_examples=40, deadline=None)
-@given(
-    t=st.integers(2, 64),
-    e=st.sampled_from([4, 8, 16]),
-    k=st.integers(1, 4),
-    seed=st.integers(0, 1000),
-)
-def test_routing_invariants(t, e, k, seed):
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
+
+
+def _check_routing_invariants(t, e, k, seed):
     k = min(k, e)
     logits = jax.random.normal(jax.random.key(seed), (t, e))
     capacity = max(int(t * k / e * 1.25), k)
@@ -37,6 +42,30 @@ def test_routing_invariants(t, e, k, seed):
         per_expert[s // capacity] = per_expert.get(s // capacity, 0) + 1
     assert all(v <= capacity for v in per_expert.values())
     assert np.isfinite(float(aux))
+
+
+def test_routing_invariants_examples():
+    rng = random.Random(0)
+    cases = [(2, 4, 1), (64, 16, 4), (7, 4, 4), (33, 8, 2)]
+    cases += [
+        (rng.randint(2, 64), rng.choice([4, 8, 16]), rng.randint(1, 4))
+        for _ in range(8)
+    ]
+    for t, e, k in cases:
+        _check_routing_invariants(t, e, k, seed=rng.randint(0, 1000))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        t=st.integers(2, 64),
+        e=st.sampled_from([4, 8, 16]),
+        k=st.integers(1, 4),
+        seed=st.integers(0, 1000),
+    )
+    def test_routing_invariants(t, e, k, seed):
+        _check_routing_invariants(t, e, k, seed)
 
 
 def test_first_come_first_served_order():

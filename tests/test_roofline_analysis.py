@@ -105,7 +105,9 @@ def rules():
     from repro.configs import get_config
     from repro.distributed.sharding import ShardingRules
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    from repro.compat import abstract_mesh
+
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     return ShardingRules(get_config("stablelm_12b"), mesh)
 
 
