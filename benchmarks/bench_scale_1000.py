@@ -12,10 +12,19 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_scale_1000.py            # full size
     PYTHONPATH=src python benchmarks/bench_scale_1000.py --quick    # 100 VMs
     PYTHONPATH=src python benchmarks/bench_scale_1000.py --compare-reference
+    PYTHONPATH=src python benchmarks/bench_scale_1000.py --mega     # + 10k-VM burst
 
 ``--compare-reference`` also times the old full-recompute engine on a
 scaled-down wave (it is quadratic — full size would take hours) so the
 speedup of the incremental engine is recorded alongside the results.
+
+Every run additionally records a control-plane microbenchmark: building one
+10,000-node FunctionTree via ``FTManager.bulk_insert`` (``ft_build_s``),
+mean churn-op (delete + re-insert) latency at that size, and mean
+``pick_vm_for`` placement latency over a warm 10k-VM pool — the numbers the
+O(log n) frontier/index/heap control plane (PR 2) is accountable for.
+``--mega`` appends the 10× mega-burst (10k VMs / 25 functions / 100k
+containers) end-to-end results.
 """
 from __future__ import annotations
 
@@ -42,9 +51,49 @@ def _result_dict(cfg, res) -> dict:
         "peak_registry_egress_bytes_per_s": res.peak_registry_egress,
         "peak_registry_egress_gbps": res.peak_registry_egress * 8 / 1e9,
         "reparents_during_churn": res.reparents,
+        "control_plane_build_s": res.build_s,
+        "churn_wall_s": res.churn_s,
+        "churn_op_latency_s": res.churn_op_s,
         "ft_heights": {
             fid: st["height"] for fid, st in sorted(res.tree_stats.items())
         },
+    }
+
+
+def _control_plane_micro(n: int = 10_000, churn: int = 500, picks: int = 1000) -> dict:
+    """Time the control plane in isolation: FT build, churn ops, placement."""
+    import random
+
+    from repro.core import FTManager, VMInfo
+
+    mgr = FTManager(max_functions_per_vm=30)
+    vm_ids = [f"vm{i:05d}" for i in range(n)]
+    for v in vm_ids:
+        mgr.add_free_vm(VMInfo(v))
+    for _ in vm_ids:
+        mgr.reserve_vm()
+    t0 = time.perf_counter()
+    ft = mgr.bulk_insert("bench", vm_ids)
+    ft_build_s = time.perf_counter() - t0
+    ft.check_invariants()
+
+    rng = random.Random(0)
+    t0 = time.perf_counter()
+    for _ in range(churn):
+        v = vm_ids[rng.randrange(n)]
+        mgr.delete("bench", v)
+        mgr.insert("bench", v)
+    churn_op_s = (time.perf_counter() - t0) / churn
+
+    t0 = time.perf_counter()
+    for k in range(picks):
+        mgr.pick_vm_for(f"pick{k}")
+    pick_s = (time.perf_counter() - t0) / picks
+    return {
+        "ft_nodes": n,
+        "ft_build_s": ft_build_s,
+        "churn_op_latency_s": churn_op_s,
+        "pick_vm_latency_s": pick_s,
     }
 
 
@@ -92,6 +141,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true", help="100 VMs / 250 containers")
     ap.add_argument("--compare-reference", action="store_true")
+    ap.add_argument(
+        "--mega",
+        action="store_true",
+        help="also run the 10k-VM / 25-function / 100k-container mega-burst",
+    )
     ap.add_argument("--out", default="BENCH_scale.json")
     args = ap.parse_args()
 
@@ -111,6 +165,21 @@ def main() -> None:
     out = _result_dict(cfg, res)
     out["total_wall_s"] = total_wall
     out["paper_reference_s"] = 8.3  # §4.2: 2500 containers / 1000 VMs
+
+    micro = _control_plane_micro()
+    out["control_plane_micro"] = micro
+    out["ft_build_s"] = micro["ft_build_s"]  # 10k-node FT via bulk_insert
+
+    if args.mega:
+        from repro.sim.scale import mega_burst_config
+
+        mcfg = mega_burst_config(seed=args.seed)
+        t0 = time.perf_counter()
+        mres = run_scale(mcfg)
+        mwall = time.perf_counter() - t0
+        mega = _result_dict(mcfg, mres)
+        mega["total_wall_s"] = mwall
+        out["mega_burst"] = mega
 
     if args.compare_reference:
         ref_cfg = ScaleConfig(
@@ -141,6 +210,18 @@ def main() -> None:
         f"({res.events_per_s:,.0f} ev/s), peak registry egress "
         f"{res.peak_registry_egress * 8 / 1e9:.2f} Gbps -> {args.out}"
     )
+    print(
+        f"control plane: 10k-node FT build {micro['ft_build_s']*1e3:.1f} ms, "
+        f"churn op {micro['churn_op_latency_s']*1e6:.1f} us, "
+        f"pick_vm_for {micro['pick_vm_latency_s']*1e6:.1f} us"
+    )
+    if args.mega:
+        m = out["mega_burst"]
+        print(
+            f"mega burst: {m['n_containers']} containers / {m['n_vms']} VMs "
+            f"in {m['total_wall_s']:.1f} s wall (build {m['control_plane_build_s']:.2f} s, "
+            f"engine {m['wall_s']:.2f} s), fetch makespan {m['fetch_makespan_s']:.2f} s"
+        )
 
 
 if __name__ == "__main__":

@@ -2,9 +2,39 @@
 # Tier-1 test invocation — CI and humans run exactly this.
 #
 #   scripts/ci.sh                 fast suite (the tier-1 gate)
-#   scripts/ci.sh --runslow       also run the 1000-VM scale tests
+#   scripts/ci.sh --runslow       also run the 1000-VM scale tests and the
+#                                 10k-VM / 100k-container mega-burst
 #   scripts/ci.sh tests/test_sim.py -k determinism   any pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Perf smoke: the control plane must stay O(log n).  Building a 5k-node
+# FunctionTree plus 500 churn ops takes ~50 ms on the frontier/index paths
+# and seconds on the old O(n²) BFS-scan paths, so a generous 1.25 s budget
+# can never be met by a quadratic regression silently sneaking back in.
+python - <<'PY'
+import random, time
+from repro.core import FunctionTree
+
+t0 = time.perf_counter()
+ft = FunctionTree("perf-smoke")
+for i in range(5_000):
+    ft.insert(f"v{i}")
+rng = random.Random(0)
+ids = [f"v{i}" for i in range(5_000)]
+for _ in range(500):
+    v = ids[rng.randrange(len(ids))]
+    ft.delete(v)
+    ft.insert(v)
+elapsed = time.perf_counter() - t0
+ft.check_invariants()
+budget = 1.25
+assert elapsed < budget, (
+    f"perf smoke FAILED: 5k-node FT build + 500 churn ops took {elapsed:.2f} s "
+    f"(budget {budget} s) — the O(n^2) control-plane path is back"
+)
+print(f"perf smoke ok: 5k-node FT build + 500 churn ops in {elapsed*1e3:.0f} ms")
+PY
+
 exec python -m pytest -x -q "$@"

@@ -169,12 +169,12 @@ class CheckpointManager:
     def restore(self, step: int, like: PyTree) -> PyTree:
         """Full restore into the structure of ``like``."""
         doc, metas = self._load_manifest(step)
-        reader = BlockReader(self._paths(step)[0])
-        by_path = {m.path: m for m in metas}
-        leaves = []
-        for path, leaf in _leaf_paths(like):
-            m = by_path[path]
-            leaves.append(self._decode(m, reader.read_range(m.offset, m.nbytes)))
+        with BlockReader(self._paths(step)[0]) as reader:
+            by_path = {m.path: m for m in metas}
+            leaves = []
+            for path, leaf in _leaf_paths(like):
+                m = by_path[path]
+                leaves.append(self._decode(m, reader.read_range(m.offset, m.nbytes)))
         return jax.tree.unflatten(jax.tree.structure(like), leaves)
 
     def restore_lazy(
@@ -214,6 +214,6 @@ class CheckpointManager:
 
     def iter_blocks(self, step: int) -> Iterator[bytes]:
         """Compressed blocks in order — the unit FaaSNet streams down FTs."""
-        reader = BlockReader(self._paths(step)[0])
-        for i in range(reader.manifest.n_blocks):
-            yield reader.fetch_block_compressed(i)
+        with BlockReader(self._paths(step)[0]) as reader:
+            for i in range(reader.manifest.n_blocks):
+                yield reader.fetch_block_compressed(i)

@@ -232,6 +232,14 @@ class BlockReader:
     Models the FaaSNet worker's lazy fetch: a range read touches only the
     covering blocks; previously fetched blocks are served from cache (the
     worker's local storage) without re-counting network bytes.
+
+    I/O discipline: one persistent file handle for the reader's lifetime
+    (use :meth:`close` or the context-manager protocol), and
+    :meth:`read_range` coalesces runs of contiguous uncached blocks into a
+    single seek+read — the compressed blocks are back-to-back on disk, so a
+    cold sequential range costs one syscall instead of one per block.
+    ``stats`` accounting is unchanged: the same per-block useful/fetched
+    byte and block counts as the one-read-per-block implementation.
     """
 
     def __init__(self, path: str, manifest: BlockManifest | None = None) -> None:
@@ -241,25 +249,70 @@ class BlockReader:
         self._cache: dict[int, bytes] = {}
         self._codec = _make_codec(self.manifest.codec, 0)
         self.stats = ReadStats()
+        self._f = open(path, "rb")
+        self.file_reads = 0  # seek+read syscall pairs issued (coalescing telemetry)
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "BlockReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # pragma: no cover - GC safety net
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _read_at(self, data_offset: int, size: int) -> bytes:
+        if self._f is None:
+            raise ValueError(f"BlockReader for {self.path} is closed")
+        self._f.seek(self._data_start + data_offset)
+        self.file_reads += 1
+        return self._f.read(size)
 
     # -- block-level -----------------------------------------------------
     def fetch_block_compressed(self, i: int) -> bytes:
         """Raw compressed block i — the unit streamed down FT edges."""
         m = self.manifest
-        with open(self.path, "rb") as f:
-            f.seek(self._data_start + m.offsets[i])
-            return f.read(m.block_compressed_size(i))
+        return self._read_at(m.offsets[i], m.block_compressed_size(i))
 
-    def get_block(self, i: int) -> bytes:
-        if i in self._cache:
-            return self._cache[i]
-        comp = self.fetch_block_compressed(i)
+    def _ingest(self, i: int, comp: bytes) -> bytes:
+        """Decompress + cache block ``i`` and account for the network fetch."""
         raw = self._codec.decompress(comp, self.manifest.block_raw_size(i))
         self._cache[i] = raw
         self.stats.blocks_fetched += 1
         self.stats.fetched_compressed += len(comp)
         self.stats.fetched_raw += len(raw)
         return raw
+
+    def get_block(self, i: int) -> bytes:
+        if i in self._cache:
+            return self._cache[i]
+        return self._ingest(i, self.fetch_block_compressed(i))
+
+    def _fetch_run(self, first: int, last: int) -> None:
+        """Fetch uncached blocks [first, last] with one read per contiguous run."""
+        m = self.manifest
+        i = first
+        while i <= last:
+            if i in self._cache:
+                i += 1
+                continue
+            j = i
+            while j + 1 <= last and (j + 1) not in self._cache:
+                j += 1
+            span = self._read_at(m.offsets[i], m.offsets[j + 1] - m.offsets[i])
+            base = m.offsets[i]
+            for k in range(i, j + 1):
+                self._ingest(k, span[m.offsets[k] - base : m.offsets[k + 1] - base])
+            i = j + 1
 
     # -- range-level (on-demand I/O) --------------------------------------
     def read_range(self, offset: int, length: int) -> bytes:
@@ -270,6 +323,8 @@ class BlockReader:
             )
         self.stats.useful_bytes += length
         first, last = m.block_range_for(offset, length)
+        if first <= last:
+            self._fetch_run(first, last)
         out = io.BytesIO()
         for i in range(first, last + 1):
             raw = self.get_block(i)

@@ -11,13 +11,27 @@ Responsibilities (all control-plane; no payload bytes flow through here):
     in/out bandwidth across overlapping FTs);
   * the ``<function_id, FT>`` metadata map, snapshottable to a dict for the
     etcd-style metadata-store sync the paper describes.
+
+Placement is O(log V) amortized per decision: candidates live in a lazily
+rebuilt min-heap keyed ``(load, seed_load, registration_index)`` (or
+``(-load, registration_index)`` for the pure binpack mode) with stale
+entries dropped on pop — a VM's entry is re-pushed whenever its key
+changes, so the entry matching the current key is always present.
+``seed_load`` (the VM's total outbound child streams across all trees) is
+maintained incrementally from :attr:`FunctionTree.on_reparent` callbacks
+plus the :class:`~repro.core.function_tree.DeleteInfo` record instead of
+re-walking trees.  The tie-break by registration index reproduces the
+original full-pool stable sort exactly, so placement decisions are
+bit-identical to the O(V log V) implementation they replace.
 """
 from __future__ import annotations
 
+import heapq
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .function_tree import FunctionTree
+from .function_tree import FTNode, FunctionTree
 
 
 @dataclass
@@ -46,10 +60,15 @@ class FTManager:
     ) -> None:
         self.trees: dict[str, FunctionTree] = {}
         self.vms: dict[str, VMInfo] = {}
-        self.free_pool: list[str] = []
+        self.free_pool: deque[str] = deque()
+        self._free_ids: set[str] = set()  # guards release→reserve→release races
         self.max_functions_per_vm = max_functions_per_vm
         self.vm_idle_reclaim_s = vm_idle_reclaim_s
         self.ft_aware_placement = ft_aware_placement
+        # Incremental placement state --------------------------------------
+        self._seed_loads: dict[str, int] = {}  # vm_id -> Σ children over trees
+        self._vm_order: dict[str, int] = {}  # registration index (sort tie-break)
+        self._placement_heap: list[tuple] = []  # (key..., vm_id), lazily pruned
         # counters for tests / telemetry
         self.stats = {
             "inserts": 0,
@@ -66,12 +85,16 @@ class FTManager:
         if vm.vm_id in self.vms:
             raise ValueError(f"vm {vm.vm_id!r} already registered")
         self.vms[vm.vm_id] = vm
+        self._vm_order[vm.vm_id] = len(self._vm_order)
+        self._seed_loads.setdefault(vm.vm_id, 0)
         self.free_pool.append(vm.vm_id)
+        self._free_ids.add(vm.vm_id)
 
     def reserve_vm(self, now: float = 0.0) -> Optional[VMInfo]:
         """Move one VM from the free pool to active (scheduler scale-out)."""
         while self.free_pool:
-            vm_id = self.free_pool.pop(0)
+            vm_id = self.free_pool.popleft()
+            self._free_ids.discard(vm_id)
             vm = self.vms[vm_id]
             if vm.alive:
                 vm.last_active = now
@@ -80,19 +103,39 @@ class FTManager:
         return None
 
     def release_vm(self, vm_id: str) -> None:
-        """Return an active VM (no functions left) to the free pool."""
+        """Return an active VM (no functions left) to the free pool.
+
+        Idempotent: a release→reserve→release churn loop (or a double
+        release from two reclaim paths) never double-appends the id.
+        """
         vm = self.vms[vm_id]
         assert not vm.functions, "cannot release a VM still holding functions"
-        if vm.alive:
+        if vm.alive and vm_id not in self._free_ids:
             self.free_pool.append(vm_id)
+            self._free_ids.add(vm_id)
 
     # ------------------------------------------------------------------
     # Tree membership (insert / delete drive everything else)
     # ------------------------------------------------------------------
     def tree(self, function_id: str) -> FunctionTree:
         if function_id not in self.trees:
-            self.trees[function_id] = FunctionTree(function_id)
+            ft = FunctionTree(function_id)
+            ft.on_reparent.append(self._account_reparent)
+            self.trees[function_id] = ft
         return self.trees[function_id]
+
+    def _account_reparent(
+        self, node: FTNode, old_parent: Optional[FTNode], new_parent: Optional[FTNode]
+    ) -> None:
+        """Keep per-VM child-stream totals exact across rotations/splices."""
+        if old_parent is not None:
+            self._seed_load_add(old_parent.vm_id, -1)
+        if new_parent is not None:
+            self._seed_load_add(new_parent.vm_id, +1)
+
+    def _seed_load_add(self, vm_id: str, delta: int) -> None:
+        self._seed_loads[vm_id] = self._seed_loads.get(vm_id, 0) + delta
+        self._heap_push(vm_id)
 
     def insert(self, function_id: str, vm_id: str, now: float = 0.0) -> str | None:
         """Add ``vm_id`` to the function's FT; returns the upstream peer id.
@@ -111,7 +154,11 @@ class FTManager:
         vm.functions.add(function_id)
         vm.last_active = now
         self.stats["inserts"] += 1
-        return ft.parent_of(vm_id)
+        up = ft.parent_of(vm_id)
+        if up is not None:
+            self._seed_load_add(up, +1)  # attach is silent on on_reparent
+        self._heap_push(vm_id)
+        return up
 
     def bulk_insert(
         self, function_id: str, vm_ids: list[str], now: float = 0.0
@@ -128,8 +175,17 @@ class FTManager:
 
     def delete(self, function_id: str, vm_id: str) -> None:
         ft = self.trees[function_id]
-        ft.delete(vm_id)
+        info = ft.delete(vm_id)
+        # Silent structural changes (see FunctionTree.delete): the victim
+        # leaves its parent, and — when a filler was promoted — the filler
+        # leaves its own pre-unlink parent.  Rotations/splices already fired
+        # on_reparent with exact (old, new) pairs.
+        if info.parent is not None:
+            self._seed_load_add(info.parent, -1)
+        if info.filler is not None and info.filler_parent is not None:
+            self._seed_load_add(info.filler_parent, -1)
         self.vms[vm_id].functions.discard(function_id)
+        self._heap_push(vm_id)
         self.stats["deletes"] += 1
         if len(ft) == 0:
             del self.trees[function_id]
@@ -137,6 +193,29 @@ class FTManager:
     # ------------------------------------------------------------------
     # Placement (paper §3.3 "Function Placement on VMs" + §5 FT-aware)
     # ------------------------------------------------------------------
+    def _heap_key(self, vm: VMInfo) -> tuple:
+        if self.ft_aware_placement:
+            return (
+                len(vm.functions),
+                self._seed_loads.get(vm.vm_id, 0),
+                self._vm_order[vm.vm_id],
+            )
+        return (-len(vm.functions), self._vm_order[vm.vm_id])  # binpack: fullest first
+
+    def _heap_push(self, vm_id: str) -> None:
+        vm = self.vms.get(vm_id)
+        if vm is None or not vm.alive or not vm.functions:
+            return  # never a placement candidate until its key next changes
+        heapq.heappush(self._placement_heap, self._heap_key(vm) + (vm_id,))
+
+    def _rebuild_heap(self) -> None:
+        self._placement_heap = [
+            self._heap_key(vm) + (vm.vm_id,)
+            for vm in self.vms.values()
+            if vm.alive and vm.functions
+        ]
+        heapq.heapify(self._placement_heap)
+
     def pick_vm_for(self, function_id: str, now: float = 0.0) -> Optional[VMInfo]:
         """Choose a host for a new instance of ``function_id``.
 
@@ -146,25 +225,48 @@ class FTManager:
         those, one that is a leaf in most of its trees — leaves have zero
         outbound seeding load, so adding an inbound stream there balances
         bandwidth.  Falls back to reserving a free VM.
+
+        Amortized O(log V): pops the lazily pruned candidate heap until an
+        entry matches its VM's current key; entries skipped only because
+        the VM already hosts ``function_id`` are pushed back afterwards.
         """
-        candidates = [
-            vm
-            for vm in self.vms.values()
-            if vm.alive
-            and vm.functions
-            and function_id not in vm.functions
-            and len(vm.functions) < self.max_functions_per_vm
-        ]
-        if candidates:
-            if self.ft_aware_placement:
-                candidates.sort(key=lambda vm: (vm.load(), self._seed_load(vm.vm_id)))
-            else:
-                candidates.sort(key=lambda vm: -vm.load())  # pure binpack: fill fullest
-            return candidates[0]
+        if len(self._placement_heap) > max(64, 4 * len(self.vms)):
+            self._rebuild_heap()  # mostly-stale heap: rebuild and re-amortize
+        heap = self._placement_heap
+        skipped: list[tuple] = []
+        winner: Optional[VMInfo] = None
+        seen: set[str] = set()
+        while heap:
+            entry = heapq.heappop(heap)
+            vm_id = entry[-1]
+            vm = self.vms[vm_id]
+            if (
+                not vm.alive
+                or not vm.functions
+                or len(vm.functions) >= self.max_functions_per_vm
+                or entry[:-1] != self._heap_key(vm)
+            ):
+                continue  # stale or ineligible: the live entry is elsewhere
+            if function_id in vm.functions:
+                if vm_id not in seen:  # keep exactly one live entry per VM
+                    seen.add(vm_id)
+                    skipped.append(entry)
+                continue
+            winner = vm
+            skipped.append(entry)  # picking does not mutate state: keep it live
+            break
+        for entry in skipped:
+            heapq.heappush(heap, entry)
+        if winner is not None:
+            return winner
         return self.reserve_vm(now)
 
     def _seed_load(self, vm_id: str) -> int:
         """Total number of downstream children across all trees (outbound streams)."""
+        return self._seed_loads.get(vm_id, 0)
+
+    def _seed_load_recompute(self, vm_id: str) -> int:
+        """Reference (tree-walking) seed load — used by restore and tests."""
         n = 0
         for fid in self.vms[vm_id].functions:
             ft = self.trees.get(fid)
@@ -249,8 +351,16 @@ class FTManager:
                 last_active=v["last_active"],
                 alive=v["alive"],
             )
-        mgr.free_pool = list(snap["free_pool"])
+            mgr._vm_order[vid] = len(mgr._vm_order)
+        mgr.free_pool = deque(snap["free_pool"])
+        mgr._free_ids = set(mgr.free_pool)
         from .function_tree import FunctionTree as FT
 
-        mgr.trees = {fid: FT.from_dict(d) for fid, d in snap["trees"].items()}
+        for fid, d in snap["trees"].items():
+            ft = FT.from_dict(d)
+            ft.on_reparent.append(mgr._account_reparent)
+            mgr.trees[fid] = ft
+        for vid in mgr.vms:
+            mgr._seed_loads[vid] = mgr._seed_load_recompute(vid)
+            mgr._heap_push(vid)
         return mgr

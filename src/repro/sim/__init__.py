@@ -2,7 +2,7 @@
 from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
 from .engine import GBPS, FlowSim, NICConfig, SimConfig
 from .reference import ReferenceFlowSim
-from .scale import ScaleConfig, ScaleResult, run_scale
+from .scale import ScaleConfig, ScaleResult, mega_burst_config, run_scale
 from .traces import iot_trace, synthetic_gaming_trace
 from .workload import ReplayConfig, TickStats, TraceReplay
 
@@ -19,6 +19,7 @@ __all__ = [
     "ReferenceFlowSim",
     "ScaleConfig",
     "ScaleResult",
+    "mega_burst_config",
     "run_scale",
     "iot_trace",
     "synthetic_gaming_trace",

@@ -34,9 +34,11 @@ engine keeps per-NIC active-flow registries and a completion heap with
 lazily-invalidated entries (per-flow epoch counters); each event settles and
 re-rates just that dirty closure instead of every active flow, and batches
 all same-timestamp completions into a single settle pass.  ``remaining``
-bytes are settled lazily (per-flow ``t_last``), so an event costs
-O(degree · log F) instead of O(F), turning the previously quadratic run
-into an ~O(F log F) one.
+bytes are settled lazily (per-flow ``t_last``), and each flow's streaming
+depth is cached on its state (maintained by ``set_parent``, which also
+refreshes the downstream chain) rather than re-derived by walking parent
+chains, so an event costs O(degree · log F) instead of O(F), turning the
+previously quadratic run into an ~O(F log F) one.
 
 Determinism: events are (time, seq) ordered and every internal registry is
 keyed by a densely-assigned flow id (``fid``), so iteration order — and
@@ -97,6 +99,8 @@ class _FlowState:
     fid: int = -1  # dense engine-assigned id; all registries key on it
     t_last: float = 0.0  # time ``remaining`` was last settled
     epoch: int = 0  # bumped on every rate change; stale heap entries skip
+    depth: int = 0  # streaming depth (hops behind the chain head); cached,
+    # maintained by FlowSim.set_parent — never walk the parent chain for it
     children: list["_FlowState"] = field(default_factory=list)
     waiters: list["_FlowState"] = field(default_factory=list)  # gated on our start
 
@@ -154,6 +158,14 @@ class FlowSim:
         st.parent = parent
         if parent is not None:
             parent.children.append(st)
+        # Recompute the cached streaming depth for st and its descendants
+        # (re-attachment moves the whole downstream chain).
+        st.depth = parent.depth + 1 if parent is not None else 0
+        stack = list(st.children)
+        while stack:
+            c = stack.pop()
+            c.depth = c.parent.depth + 1
+            stack.extend(c.children)
         if st.started and not st.done:
             # attaching mid-flight changes the parent-rate cap immediately
             self._pending_dirty[st.fid] = st
@@ -256,14 +268,6 @@ class FlowSim:
                 f.remaining = max(0.0, f.remaining - f.rate * (self.now - f.t_last))
             f.t_last = self.now
 
-    @staticmethod
-    def _depth(f: _FlowState) -> int:
-        d, p = 0, f.parent
-        while p is not None:
-            d += 1
-            p = p.parent
-        return d
-
     def _recompute(self, dirty: dict[int, _FlowState]) -> None:
         """Re-rate the dirty closure, parents before streaming children."""
         cfg = self.cfg
@@ -272,7 +276,7 @@ class FlowSim:
         queued: set[int] = set()
         for f in dirty.values():
             if f.started and not f.done:
-                heapq.heappush(wl, (self._depth(f), f.fid))
+                heapq.heappush(wl, (f.depth, f.fid))
                 queued.add(f.fid)
         while wl:
             _, fid = heapq.heappop(wl)
@@ -311,7 +315,7 @@ class FlowSim:
                 # A parent-rate change propagates down the streaming chain.
                 for c in f.children:
                     if c.started and not c.done and c.fid not in queued:
-                        heapq.heappush(wl, (self._depth(c), c.fid))
+                        heapq.heappush(wl, (c.depth, c.fid))
                         queued.add(c.fid)
         if self._reg_out_sum > self.peak_registry_egress:
             self.peak_registry_egress = self._reg_out_sum

@@ -50,6 +50,23 @@ class ScaleConfig:
         return self.n_functions * min(self.containers_per_function, self.n_vms)
 
 
+def mega_burst_config(seed: int = 0, churn_ops: int = 200) -> ScaleConfig:
+    """10× paper scale: 10k VMs, 25 functions, 100k containers, one burst.
+
+    Exercises the O(log n) control plane (frontier/index FunctionTrees,
+    incremental FTManager) far past the paper's §4.2 shape; the seed
+    BFS-scan control plane could not stand this scenario up in minutes.
+    """
+    return ScaleConfig(
+        n_vms=10_000,
+        n_functions=25,
+        containers_per_function=4_000,
+        churn_ops=churn_ops,
+        seed=seed,
+        max_functions_per_vm=25,
+    )
+
+
 @dataclass
 class ScaleResult:
     makespan: float  # sim seconds: last payload fully fetched
@@ -64,6 +81,10 @@ class ScaleResult:
     reparents: int  # on_reparent notifications during churn
     tree_stats: dict[str, dict[str, int]]
     trace: list  # the engine's (time, event) log — golden-test fodder
+    # Control-plane timings (wall-clock, seconds) ----------------------
+    build_s: float = 0.0  # stand up VM pool + all FunctionTrees
+    churn_s: float = 0.0  # apply_churn total
+    churn_op_s: float = 0.0  # mean latency of one delete+reinsert churn op
 
 
 def _function_ids(cfg: ScaleConfig) -> list[str]:
@@ -106,7 +127,7 @@ def apply_churn(mgr: FTManager, members: dict[str, list[str]], cfg: ScaleConfig)
     rng = random.Random(cfg.seed + 1)
     reparents = 0
 
-    def count(node, new_parent):  # noqa: ANN001 - FunctionTree callback
+    def count(node, old_parent, new_parent):  # noqa: ANN001 - FT callback
         nonlocal reparents
         reparents += 1
 
@@ -131,8 +152,12 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
     """Provision ``n_functions`` × ``containers_per_function`` in one burst."""
     cfg = cfg or ScaleConfig()
     w = cfg.wave
+    t_build0 = time.perf_counter()
     mgr, members = build_manager(cfg)
+    build_s = time.perf_counter() - t_build0
+    t_churn0 = time.perf_counter()
     reparents = apply_churn(mgr, members, cfg)
+    churn_s = time.perf_counter() - t_churn0
 
     sim = FlowSim(
         SimConfig(
@@ -186,4 +211,7 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
         reparents=reparents,
         tree_stats=mgr.tree_stats(),
         trace=sim.trace,
+        build_s=build_s,
+        churn_s=churn_s,
+        churn_op_s=churn_s / cfg.churn_ops if cfg.churn_ops > 0 else 0.0,
     )

@@ -181,3 +181,59 @@ if HAVE_HYPOTHESIS:
         off = data.draw(st.integers(0, len(payload) - 1))
         ln = data.draw(st.integers(0, len(payload) - off))
         assert r.read_range(off, ln) == payload[off : off + ln]
+
+
+# ----------------------------------------------------------------------
+# PR 2: persistent handle + coalesced reads
+# ----------------------------------------------------------------------
+def test_cold_sequential_range_coalesces_to_one_read(tmp_path):
+    payload = os.urandom(400_000)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=32 * 1024)
+    r = BlockReader(path)
+    got = r.read_range(0, 300_000)  # covers 10 uncached blocks
+    assert got == payload[:300_000]
+    assert r.stats.blocks_fetched == 10
+    assert r.file_reads == 1  # one seek+read for the whole contiguous run
+
+
+def test_coalescing_splits_around_cached_blocks(tmp_path):
+    payload = os.urandom(10 * 8192)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=8192)
+    r = BlockReader(path)
+    r.get_block(4)  # warm the middle block
+    assert r.file_reads == 1
+    out = r.read_range(0, len(payload))
+    assert out == payload
+    # blocks 0-3 and 5-9 are two contiguous uncached runs
+    assert r.file_reads == 3
+    assert r.stats.blocks_fetched == 10  # accounting identical to per-block path
+
+
+def test_coalesced_stats_match_per_block_path(tmp_path):
+    payload = os.urandom(123_456)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=4096)
+    a, b = BlockReader(path), BlockReader(path)
+    a.read_range(1000, 100_000)  # coalesced
+    first, last = b.manifest.block_range_for(1000, 100_000)
+    b.stats.useful_bytes += 100_000
+    for i in range(first, last + 1):  # the old per-block fetch order
+        b.get_block(i)
+    assert (a.stats.useful_bytes, a.stats.fetched_compressed,
+            a.stats.fetched_raw, a.stats.blocks_fetched) == (
+        b.stats.useful_bytes, b.stats.fetched_compressed,
+        b.stats.fetched_raw, b.stats.blocks_fetched)
+    assert a.stats.amplification() == b.stats.amplification()
+
+
+def test_reader_close_and_context_manager(tmp_path):
+    payload = os.urandom(50_000)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=8192)
+    with BlockReader(path) as r:
+        assert r.read_range(0, 1000) == payload[:1000]
+    with pytest.raises(ValueError):
+        r.fetch_block_compressed(0)  # closed handle refuses cleanly
+    r.close()  # idempotent

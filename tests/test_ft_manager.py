@@ -125,3 +125,136 @@ def test_rpc_costs_total():
     assert c.control_plane_total() == pytest.approx(
         3 * c.scheduler_rpc + c.manifest_fetch + c.image_load
     )
+
+
+# ----------------------------------------------------------------------
+# PR 2: free-pool guard, incremental seed loads, heap-based placement
+# ----------------------------------------------------------------------
+def test_release_vm_double_release_is_idempotent():
+    """Regression: release → release must not double-append to free_pool."""
+    m = _mgr(n_vms=3)
+    vm = m.reserve_vm()
+    m.insert("f", vm.vm_id)
+    m.delete("f", vm.vm_id)
+    m.release_vm(vm.vm_id)
+    m.release_vm(vm.vm_id)  # double release (two reclaim paths racing)
+    assert list(m.free_pool).count(vm.vm_id) == 1
+
+
+def test_release_reserve_release_churn_no_duplicates():
+    """The release→reserve→release loop the churn harness exercises."""
+    m = _mgr(n_vms=4)
+    for _ in range(10):
+        vm = m.reserve_vm()
+        m.insert("f", vm.vm_id)
+        m.delete("f", vm.vm_id)
+        m.release_vm(vm.vm_id)
+        m.release_vm(vm.vm_id)
+    ids = list(m.free_pool)
+    assert len(ids) == len(set(ids)) == 4
+
+
+def test_seed_loads_incremental_matches_recompute():
+    """_seed_loads stays exact through insert/delete churn (AVL rotations)."""
+    import random
+
+    rng = random.Random(42)
+    m = _mgr(n_vms=30)
+    vms = [m.reserve_vm().vm_id for _ in range(30)]
+    fids = [f"f{k}" for k in range(4)]
+    members = {fid: [] for fid in fids}
+    for _ in range(600):
+        fid = fids[rng.randrange(len(fids))]
+        if members[fid] and rng.random() < 0.45:
+            v = members[fid].pop(rng.randrange(len(members[fid])))
+            m.delete(fid, v)
+        else:
+            free = [v for v in vms if fid not in m.vms[v].functions]
+            if not free:
+                continue
+            v = free[rng.randrange(len(free))]
+            m.insert(fid, v)
+            members[fid].append(v)
+        for v in vms:
+            assert m._seed_loads.get(v, 0) == m._seed_load_recompute(v), v
+
+
+def _naive_pick(m, function_id):
+    """The seed's O(V log V) placement: full-pool stable sort."""
+    candidates = [
+        vm
+        for vm in m.vms.values()
+        if vm.alive
+        and vm.functions
+        and function_id not in vm.functions
+        and len(vm.functions) < m.max_functions_per_vm
+    ]
+    if not candidates:
+        return None
+    if m.ft_aware_placement:
+        candidates.sort(key=lambda vm: (vm.load(), m._seed_load_recompute(vm.vm_id)))
+    else:
+        candidates.sort(key=lambda vm: -vm.load())
+    return candidates[0]
+
+
+@pytest.mark.parametrize("ft_aware", [True, False])
+def test_heap_placement_matches_full_sort(ft_aware):
+    """Differential: the lazy heap returns exactly the seed sort's argmin."""
+    import random
+
+    rng = random.Random(7)
+    m = _mgr(n_vms=25, ft_aware_placement=ft_aware, max_functions_per_vm=6)
+    vms = [m.reserve_vm().vm_id for _ in range(25)]
+    fids = [f"f{k}" for k in range(8)]
+    members = {fid: [] for fid in fids}
+    checked = 0
+    for _ in range(500):
+        r = rng.random()
+        fid = fids[rng.randrange(len(fids))]
+        if r < 0.4 and members[fid]:
+            v = members[fid].pop(rng.randrange(len(members[fid])))
+            m.delete(fid, v)
+        elif r < 0.8:
+            want = _naive_pick(m, fid)
+            got = m.pick_vm_for(fid)
+            if want is None:
+                assert got is None or not got.functions  # reserve_vm fallback
+            else:
+                assert got is want, (fid, got.vm_id, want.vm_id)
+                checked += 1
+                m.insert(fid, got.vm_id)
+                members[fid].append(got.vm_id)
+        else:
+            free = [v for v in vms if fid not in m.vms[v].functions
+                    and len(m.vms[v].functions) < m.max_functions_per_vm]
+            if free:
+                v = free[rng.randrange(len(free))]
+                m.insert(fid, v)
+                members[fid].append(v)
+    assert checked > 100  # the differential really ran
+
+
+def test_heap_placement_survives_vm_failure():
+    m = _mgr(n_vms=6)
+    vms = [m.reserve_vm().vm_id for _ in range(6)]
+    for v in vms:
+        m.insert("f1", v)
+    m.on_vm_failure(vms[0])
+    pick = m.pick_vm_for("f2")
+    assert pick is not None and pick.vm_id != vms[0]
+    assert pick is _naive_pick(m, "f2")
+
+
+def test_free_pool_is_deque_and_snapshot_roundtrips():
+    from collections import deque
+
+    m = _mgr(n_vms=5)
+    assert isinstance(m.free_pool, deque)
+    m.reserve_vm()
+    snap = m.snapshot()
+    assert snap["free_pool"] == [f"vm{i}" for i in range(1, 5)]
+    m2 = FTManager.restore(snap)
+    assert list(m2.free_pool) == snap["free_pool"]
+    m2.release_vm(m2.reserve_vm().vm_id)  # guard state restored too
+    assert len(list(m2.free_pool)) == len(set(m2.free_pool))

@@ -1,0 +1,142 @@
+"""Shape preservation: frontier/index FunctionTree ≡ BFS-scanning reference.
+
+The O(log n) slot discovery (open-slot frontier + open-depth descent for
+insert, height descent for the delete filler) must produce *bit-identical*
+tree shapes to the original O(n) BFS scans — the paper's semantics are
+"first BFS node with <2 children" and "last BFS node", and the golden
+traces in ``tests/test_scale.py`` depend on the shapes matching exactly.
+
+:class:`BFSReferenceTree` overrides only the two discovery methods with the
+seed's full scans; everything else (attachment, splice, rotations, retrace)
+is shared.  Driving both trees through identical mixed insert/delete
+sequences and comparing ``to_dict()`` snapshots after every op therefore
+isolates exactly the discovery logic this PR replaced.
+
+Runs seeded (≥1000 mixed ops, no third-party deps); a hypothesis variant
+adds adversarial sequences when the package is installed.
+"""
+import random
+
+import pytest
+
+from repro.core import FunctionTree
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
+
+
+class BFSReferenceTree(FunctionTree):
+    """FunctionTree whose slot discovery is the original full BFS scan."""
+
+    def _take_open_slot(self):
+        for n in self.bfs():
+            if n.child_count() < 2:
+                return n
+        raise AssertionError("unreachable: a finite binary tree has open slots")
+
+    def _last_bfs_node(self):
+        last = None
+        for n in self.bfs():
+            last = n
+        assert last is not None
+        return last
+
+
+def _drive(ops, *, check_every: int = 1):
+    """Apply one op sequence to both trees, comparing snapshots as we go."""
+    fast, ref = FunctionTree("f"), BFSReferenceTree("f")
+    for k, (op, v) in enumerate(ops):
+        if op == "insert":
+            fast.insert(v)
+            ref.insert(v)
+        else:
+            fast.delete(v)
+            ref.delete(v)
+        if k % check_every == 0:
+            assert fast.to_dict() == ref.to_dict(), (k, op, v)
+            fast.check_invariants()
+            ref.check_invariants()
+    assert fast.to_dict() == ref.to_dict()
+    fast.check_invariants()
+    ref.check_invariants()
+    return fast, ref
+
+
+def _mixed_ops(rng: random.Random, n_ops: int, p_insert: float = 0.55):
+    live: list[str] = []
+    counter = 0
+    out = []
+    for _ in range(n_ops):
+        if not live or rng.random() < p_insert:
+            v = f"n{counter}"
+            counter += 1
+            live.append(v)
+            out.append(("insert", v))
+        else:
+            v = live.pop(rng.randrange(len(live)))
+            out.append(("delete", v))
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7, 13])
+def test_shape_identical_under_mixed_churn(seed):
+    """≥1000 mixed ops per seed: byte-identical to_dict() after every op."""
+    rng = random.Random(seed)
+    _drive(_mixed_ops(rng, 1000))
+
+
+def test_shape_identical_delete_heavy():
+    """Grow to 300, then tear down in random order, checking every step."""
+    rng = random.Random(99)
+    ops = [("insert", f"n{i}") for i in range(300)]
+    live = [f"n{i}" for i in range(300)]
+    rng.shuffle(live)
+    ops += [("delete", v) for v in live]
+    _drive(ops)
+
+
+def test_shape_identical_interleaved_rebuild():
+    """Empty the tree repeatedly: the frontier fast path re-arms correctly."""
+    ops = []
+    for round_ in range(5):
+        names = [f"r{round_}_{i}" for i in range(40)]
+        ops += [("insert", v) for v in names]
+        ops += [("delete", v) for v in names[::-1]]
+    _drive(ops)
+
+
+def test_insert_after_churn_picks_bfs_first_slot():
+    """After deep churn the index descent still matches a fresh BFS scan."""
+    rng = random.Random(5)
+    fast, ref = _drive(_mixed_ops(rng, 600, p_insert=0.6))
+    for i in range(50):
+        v = f"extra{i}"
+        fast.insert(v)
+        ref.insert(v)
+        assert fast.to_dict() == ref.to_dict()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 60)), max_size=150))
+    def test_shape_identical_hypothesis(raw_ops):
+        live: list[str] = []
+        counter = 0
+        ops = []
+        for is_insert, idx in raw_ops:
+            if is_insert or not live:
+                v = f"n{counter}"
+                counter += 1
+                live.append(v)
+                ops.append(("insert", v))
+            else:
+                v = live.pop(idx % len(live))
+                ops.append(("delete", v))
+        _drive(ops)

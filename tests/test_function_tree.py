@@ -188,9 +188,10 @@ def test_on_reparent_covers_every_parent_change(seed):
         before = _parent_map(ft)
         notified: set[str] = set()
 
-        def cb(node, new_parent):
+        def cb(node, old_parent, new_parent):
             # accuracy at fire time: the pointer really is the new parent
             assert node.parent is new_parent
+            assert old_parent is not new_parent or old_parent is None
             notified.add(node.vm_id)
 
         ft.on_reparent.append(cb)
@@ -207,7 +208,7 @@ def test_on_reparent_silent_during_pure_inserts():
     """BFS-slot insertion into a complete tree never rotates or reparents."""
     ft = FunctionTree("f")
     fired: list = []
-    ft.on_reparent.append(lambda node, new_parent: fired.append(node.vm_id))
+    ft.on_reparent.append(lambda node, old, new: fired.append(node.vm_id))
     for i in range(128):
         ft.insert(f"v{i}")
     assert fired == []
@@ -218,7 +219,7 @@ def test_delete_last_bfs_leaf_no_reparent():
     for v in "abcde":
         ft.insert(v)
     fired: list = []
-    ft.on_reparent.append(lambda node, new_parent: fired.append(node.vm_id))
+    ft.on_reparent.append(lambda node, old, new: fired.append(node.vm_id))
     ft.delete("e")  # deepest-last leaf: plain unlink, nothing moves
     assert fired == []
     ft.check_invariants()

@@ -211,6 +211,49 @@ def test_scale_1000_vm_deterministic():
 
 
 # ----------------------------------------------------------------------
+# The 10× mega-burst (PR 2): 10k VMs / 25 functions / 100k containers
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_scale_10k_mega_burst_under_budget():
+    """10× paper scale end-to-end in < 30 s: the O(log n) control plane plus
+    the incremental engine.  The seed BFS-scan control plane alone would
+    blow this budget standing up the trees."""
+    from repro.sim.scale import mega_burst_config
+
+    t0 = time.perf_counter()
+    res = run_scale(mega_burst_config())
+    wall = time.perf_counter() - t0
+    assert res.n_containers == 100_000
+    assert wall < 30.0, f"mega burst took {wall:.1f} s"
+    # control-plane build of 25 × 4000-node trees must stay sub-linear-ish
+    assert res.build_s < 5.0, f"control-plane build took {res.build_s:.1f} s"
+    assert res.churn_op_s < 0.001, f"churn op latency {res.churn_op_s*1e3:.2f} ms"
+    assert res.reparents > 0
+    # every tree is a 4000-node AVL: height must be logarithmic (<= 1.44 log2 n)
+    for st in res.tree_stats.values():
+        assert st["size"] == 4000
+        assert st["height"] <= 18
+    assert 4.0 < res.makespan < 120.0, res.makespan
+    assert res.peak_registry_egress > 0
+
+
+def test_mega_burst_config_shape():
+    """Fast sanity: the mega config is 10× the paper's §4.2 burst."""
+    from repro.sim.scale import mega_burst_config
+
+    cfg = mega_burst_config()
+    assert cfg.n_vms == 10_000
+    assert cfg.total_containers() == 100_000
+    assert cfg.max_functions_per_vm >= cfg.n_functions  # placement can't wedge
+
+
+def test_scale_result_reports_control_plane_timings():
+    res = run_scale(_small_cfg())
+    assert res.build_s > 0.0
+    assert res.churn_s > 0.0 and res.churn_op_s > 0.0
+
+
+# ----------------------------------------------------------------------
 # Incremental engine internals worth pinning
 # ----------------------------------------------------------------------
 def test_same_timestamp_completions_batched():
