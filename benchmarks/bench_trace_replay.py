@@ -1,0 +1,144 @@
+"""Trace-driven multi-tenant replay benchmark (paper §4.2, Figures 11-18).
+
+Replays N overlapping tenant traces (IoT / synthetic gaming / diurnal /
+constant, via ``repro.sim.scale.multi_tenant_config``) against ONE shared
+FlowSim + VM pool and writes ``BENCH_trace.json`` with:
+
+  * per-tenant request p99/mean response, provisioning latency p99/mean,
+    provisioning makespan and peak VM footprint;
+  * platform aggregates: whole-run provisioning makespan, total
+    provisioning time, peak registry egress;
+  * the faasnet-vs-baseline provisioning-time ratio (the paper reports
+    75.2% less provisioning time, i.e. a ratio of ~0.248);
+  * failover parity: the run (with its mid-wave FTManager
+    snapshot/json/restore) re-executed without failover must produce a
+    bit-identical TickStats stream;
+  * two-run determinism of the failover run itself.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_trace_replay.py           # 8 x 2000
+    PYTHONPATH=src python benchmarks/bench_trace_replay.py --quick   # 3 x 300
+    PYTHONPATH=src python benchmarks/bench_trace_replay.py --skip-checks
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def _run(args, *, system: str, failover_at):
+    from repro.sim import MultiTenantReplay, multi_tenant_config
+
+    cfg = multi_tenant_config(
+        args.seed,
+        n_tenants=args.tenants,
+        vm_pool_size=args.pool,
+        minutes=args.minutes,
+        scale=args.scale,
+        system=system,
+        failover_at=failover_at,
+        check_partition=not args.skip_checks,
+    )
+    t0 = time.perf_counter()
+    res = MultiTenantReplay(cfg).run()
+    return res, time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--pool", type=int, default=2000)
+    ap.add_argument("--minutes", type=int, default=25)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--failover-at", type=int, default=12 * 60)
+    ap.add_argument("--quick", action="store_true", help="3 tenants / 300 VMs / 8 min")
+    ap.add_argument(
+        "--skip-checks",
+        action="store_true",
+        help="skip the parity/determinism re-runs and per-tick partition checks",
+    )
+    ap.add_argument("--out", default="BENCH_trace.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.tenants, args.pool, args.minutes = 3, 300, 8
+        args.failover_at = min(args.failover_at, 4 * 60)
+
+    res, wall = _run(args, system="faasnet", failover_at=args.failover_at)
+    base, base_wall = _run(args, system="baseline", failover_at=args.failover_at)
+
+    ratio = (
+        res.total_prov_time_s / base.total_prov_time_s
+        if base.total_prov_time_s > 0
+        else float("nan")
+    )
+    out = {
+        "n_tenants": args.tenants,
+        "vm_pool_size": args.pool,
+        "minutes": args.minutes,
+        "trace_scale": args.scale,
+        "seed": args.seed,
+        "failover_at_s": args.failover_at,
+        "failovers": res.failovers,
+        "wall_s": wall,
+        "baseline_wall_s": base_wall,
+        "per_tenant": {
+            fid: dataclasses.asdict(tr) for fid, tr in sorted(res.per_tenant.items())
+        },
+        "prov_makespan_s": res.prov_makespan_s,
+        "total_prov_time_s": res.total_prov_time_s,
+        "peak_registry_egress_bytes_per_s": res.peak_registry_egress,
+        "peak_registry_egress_gbps": res.peak_registry_egress * 8 / 1e9,
+        "free_vms_at_end": res.free_vms,
+        "manager_stats": res.manager_stats,
+        "baseline_total_prov_time_s": base.total_prov_time_s,
+        "baseline_prov_makespan_s": base.prov_makespan_s,
+        "baseline_peak_registry_egress_gbps": base.peak_registry_egress * 8 / 1e9,
+        "prov_time_ratio_vs_baseline": ratio,
+        "prov_time_reduction_pct": (1.0 - ratio) * 100.0,
+        "paper_reduction_pct": 75.2,  # §4.2: 75.2% less provisioning time
+    }
+
+    if not args.skip_checks:
+        uninterrupted, _ = _run(args, system="faasnet", failover_at=None)
+        rerun, _ = _run(args, system="faasnet", failover_at=args.failover_at)
+        out["failover_parity"] = res.timelines == uninterrupted.timelines
+        out["two_run_deterministic"] = (
+            res.timelines == rerun.timelines and res.per_tenant == rerun.per_tenant
+        )
+        assert out["failover_parity"], "failover run diverged from uninterrupted run"
+        assert out["two_run_deterministic"], "replay is not two-run deterministic"
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(
+        f"{args.tenants} tenants / {args.pool} VMs / {args.minutes} min: "
+        f"faasnet total prov {res.total_prov_time_s:.0f} s vs baseline "
+        f"{base.total_prov_time_s:.0f} s -> ratio {ratio:.3f} "
+        f"({(1-ratio)*100:.1f}% less; paper: 75.2%) -> {args.out}"
+    )
+    print(
+        f"peak registry egress {res.peak_registry_egress*8/1e9:.2f} Gbps "
+        f"(baseline {base.peak_registry_egress*8/1e9:.2f} Gbps), "
+        f"failovers={res.failovers}"
+        + (
+            f", parity={out['failover_parity']}, "
+            f"deterministic={out['two_run_deterministic']}"
+            if not args.skip_checks
+            else ""
+        )
+    )
+    for fid, tr in sorted(res.per_tenant.items()):
+        print(
+            f"  {fid:12s} req={tr.requests:6d} p99resp={tr.p99_response_s:6.2f}s "
+            f"p99prov={tr.p99_prov_s:6.2f}s makespan={tr.prov_makespan_s:7.1f}s "
+            f"peak_vms={tr.peak_vms}"
+        )
+
+
+if __name__ == "__main__":
+    main()

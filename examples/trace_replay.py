@@ -1,6 +1,13 @@
-"""Replay the paper's IoT production trace against three systems (§4.2).
+"""Replay the paper's production traces against three systems (§4.2).
+
+Single tenant (IoT trace, the paper's Figure 11 shape)::
 
     PYTHONPATH=src python examples/trace_replay.py [--minutes 35]
+
+Multi-tenant (overlapping IoT/gaming/diurnal/constant waves on one shared
+registry + VM pool, with a mid-wave scheduler failover)::
+
+    PYTHONPATH=src python examples/trace_replay.py --multi [--tenants 8]
 """
 import argparse
 import sys
@@ -12,12 +19,7 @@ import statistics as st
 from repro.sim import ReplayConfig, TraceReplay, iot_trace
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--minutes", type=int, default=35)
-    ap.add_argument("--scale", type=float, default=1 / 3)
-    args = ap.parse_args()
-
+def single_tenant(args) -> None:
     trace = iot_trace(scale=args.scale)[: args.minutes * 60]
     burst_t = 9 * 60
     print(f"IoT trace: {args.minutes} min at {args.scale:.2f} scale "
@@ -33,6 +35,55 @@ def main() -> None:
         vms = max(ts.active_vms for ts in tl)
         print(f"{system:12s} {peak:9.1f}s {rec:8.0f}s {pm:9.1f}s {vms:9d}")
     print("paper:       faasnet 6s / 28s recovery; baseline 28s / 113s")
+
+
+def multi_tenant(args) -> None:
+    from repro.sim import MultiTenantReplay, multi_tenant_config
+
+    results = {}
+    for system in ("faasnet", "baseline"):
+        cfg = multi_tenant_config(
+            args.seed,
+            n_tenants=args.tenants,
+            vm_pool_size=args.pool,
+            minutes=args.minutes,
+            scale=args.multi_scale,
+            system=system,
+            failover_at=args.minutes * 30,  # mid-run scheduler failover
+        )
+        results[system] = MultiTenantReplay(cfg).run()
+    res = results["faasnet"]
+    print(f"{args.tenants} tenants sharing {args.pool} VMs + one registry, "
+          f"{args.minutes} min, scheduler failover at t={args.minutes * 30}s "
+          f"(failovers={res.failovers})")
+    print(f"{'tenant':12s} {'requests':>8s} {'p99 resp':>9s} {'p99 prov':>9s} "
+          f"{'peak VMs':>8s}")
+    for fid, tr in sorted(res.per_tenant.items()):
+        print(f"{fid:12s} {tr.requests:8d} {tr.p99_response_s:8.1f}s "
+              f"{tr.p99_prov_s:8.1f}s {tr.peak_vms:8d}")
+    base_prov = results["baseline"].total_prov_time_s
+    ratio = res.total_prov_time_s / base_prov if base_prov > 0 else float("nan")
+    print(f"total provisioning time: faasnet {res.total_prov_time_s:.0f}s vs "
+          f"baseline {base_prov:.0f}s "
+          f"-> {(1 - ratio) * 100:.1f}% less (paper: 75.2%)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=int, default=35)
+    ap.add_argument("--scale", type=float, default=1 / 3)
+    ap.add_argument("--multi", action="store_true",
+                    help="overlapping multi-tenant waves instead of one tenant")
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--pool", type=int, default=2000)
+    ap.add_argument("--multi-scale", type=float, default=0.25,
+                    help="trace scale for --multi (the IoT tenant's factor)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.multi:
+        multi_tenant(args)
+    else:
+        single_tenant(args)
 
 
 if __name__ == "__main__":

@@ -37,4 +37,35 @@ assert elapsed < budget, (
 print(f"perf smoke ok: 5k-node FT build + 500 churn ops in {elapsed*1e3:.0f} ms")
 PY
 
+# Trace-replay smoke: a short multi-tenant prefix with a mid-run scheduler
+# failover must (a) finish in seconds, (b) keep the pool partitioned at
+# every tick, and (c) be bit-identical to an uninterrupted run — the tier-1
+# guard on the whole replay stack (traces -> FTManager -> FlowSim).
+python - <<'PY'
+import time
+from repro.sim import MultiTenantReplay, multi_tenant_config
+
+t0 = time.perf_counter()
+cfg = multi_tenant_config(
+    n_tenants=3, vm_pool_size=200, minutes=3, failover_at=80, check_partition=True
+)
+res = MultiTenantReplay(cfg).run()
+plain = multi_tenant_config(
+    n_tenants=3, vm_pool_size=200, minutes=3, failover_at=None
+)
+unbroken = MultiTenantReplay(plain).run()
+elapsed = time.perf_counter() - t0
+assert res.failovers == 1
+assert res.timelines == unbroken.timelines, "failover perturbed the replay"
+assert sum(t.provisioned for t in res.per_tenant.values()) > 0
+budget = 10.0
+assert elapsed < budget, (
+    f"trace smoke FAILED: 3-tenant / 3-min replay took {elapsed:.2f} s "
+    f"(budget {budget} s)"
+)
+print(
+    f"trace smoke ok: 3-tenant replay + failover parity in {elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

@@ -324,12 +324,24 @@ class FTManager:
     # Metadata-store sync (paper: scheduler shards sync with etcd)
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
+        """JSON-serializable full control-plane state (scheduler failover).
+
+        Everything a stand-in scheduler shard needs to continue *bit-
+        identically* is captured: tree topologies, per-VM records, the free
+        pool in FIFO order, the VM registration order (``_vm_order`` is the
+        placement tie-break, so it must survive the wire), and the telemetry
+        counters (so reclaim/repair accounting stays continuous across the
+        failover).  ``repro.sim.multi_tenant`` round-trips this through
+        ``json.dumps`` mid-replay and proves the replay stream unchanged.
+        """
+        order = sorted(self._vm_order, key=self._vm_order.__getitem__)
         return {
             "trees": {fid: ft.to_dict() for fid, ft in self.trees.items()},
             "vms": {
                 vid: {
                     "address": vm.address,
                     "port": vm.port,
+                    "mem_mb": vm.mem_mb,
                     "functions": sorted(vm.functions),
                     "alive": vm.alive,
                     "last_active": vm.last_active,
@@ -337,23 +349,31 @@ class FTManager:
                 for vid, vm in self.vms.items()
             },
             "free_pool": list(self.free_pool),
+            "vm_order": order,
+            "stats": dict(self.stats),
         }
 
     @classmethod
     def restore(cls, snap: dict, **kwargs) -> "FTManager":
         mgr = cls(**kwargs)
+        # Registration order is authoritative when recorded; older snapshots
+        # fall back to the (insertion-ordered) vms mapping itself.
+        for vid in snap.get("vm_order", snap["vms"]):
+            mgr._vm_order[vid] = len(mgr._vm_order)
         for vid, v in snap["vms"].items():
             mgr.vms[vid] = VMInfo(
                 vm_id=vid,
                 address=v["address"],
                 port=v["port"],
+                mem_mb=v.get("mem_mb", 4096),
                 functions=set(v["functions"]),
                 last_active=v["last_active"],
                 alive=v["alive"],
             )
-            mgr._vm_order[vid] = len(mgr._vm_order)
+            mgr._vm_order.setdefault(vid, len(mgr._vm_order))
         mgr.free_pool = deque(snap["free_pool"])
         mgr._free_ids = set(mgr.free_pool)
+        mgr.stats.update(snap.get("stats", {}))
         from .function_tree import FunctionTree as FT
 
         for fid, d in snap["trees"].items():

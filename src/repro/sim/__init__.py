@@ -1,9 +1,28 @@
 """Discrete-event simulation of FaaSNet provisioning and the paper's baselines."""
 from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
 from .engine import GBPS, FlowSim, NICConfig, SimConfig
+from .multi_tenant import (
+    MultiTenantConfig,
+    MultiTenantReplay,
+    MultiTenantResult,
+    TenantConfig,
+    TenantResult,
+    run_multi_tenant,
+)
 from .reference import ReferenceFlowSim
-from .scale import ScaleConfig, ScaleResult, mega_burst_config, run_scale
-from .traces import iot_trace, synthetic_gaming_trace
+from .scale import (
+    ScaleConfig,
+    ScaleResult,
+    mega_burst_config,
+    multi_tenant_config,
+    run_scale,
+)
+from .traces import (
+    constant_trace,
+    diurnal_trace,
+    iot_trace,
+    synthetic_gaming_trace,
+)
 from .workload import ReplayConfig, TickStats, TraceReplay
 
 __all__ = [
@@ -16,11 +35,20 @@ __all__ = [
     "FlowSim",
     "NICConfig",
     "SimConfig",
+    "MultiTenantConfig",
+    "MultiTenantReplay",
+    "MultiTenantResult",
+    "TenantConfig",
+    "TenantResult",
+    "run_multi_tenant",
     "ReferenceFlowSim",
     "ScaleConfig",
     "ScaleResult",
     "mega_burst_config",
+    "multi_tenant_config",
     "run_scale",
+    "constant_trace",
+    "diurnal_trace",
     "iot_trace",
     "synthetic_gaming_trace",
     "ReplayConfig",

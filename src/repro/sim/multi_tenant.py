@@ -1,0 +1,397 @@
+"""Multi-tenant trace replay: overlapping waves on one shared platform (§4.2).
+
+The paper's end-to-end claim is not a single burst but *trace-driven*
+behaviour: FaaSNet sustains the scaled IoT and gaming traces while growing
+and reclaiming function trees as load moves between tenants.  This module
+drives N tenants — each with its own RPS trace, function id, arrival-jitter
+seed and an :class:`~repro.core.ft_manager.FTManager`-owned FunctionTree —
+against ONE shared :class:`~repro.sim.engine.FlowSim` and ONE shared VM
+pool, so overlapping waves contend for registry egress/QPS and per-VM NICs
+exactly as in production.
+
+Scheduler failover (ROADMAP: scheduler-shard metadata sync)
+-----------------------------------------------------------
+At a configurable tick the replay serializes the whole control plane with
+:meth:`FTManager.snapshot`, round-trips it through ``json.dumps`` (proving
+it is wire-serializable, the etcd-style sync the paper describes), discards
+the manager object and continues on :meth:`FTManager.restore`.  Because the
+snapshot captures tree topologies, the free pool in FIFO order, the VM
+registration order and the telemetry counters, the failed-over run emits a
+**bit-identical** :class:`TickStats` stream versus an uninterrupted run — pinned by ``tests/test_multi_tenant.py`` and the
+``scripts/ci.sh`` trace smoke.
+
+Determinism: arrivals come from the pure LCG in ``repro.sim.traces``,
+tenants are stepped in registration order each tick, and the engine orders
+events by (time, seq) — two runs of the same config are bit-identical.
+
+The free pool and the per-tenant trees partition the VM pool at every tick
+(a VM is free, provisioning for exactly one tenant, or warm for exactly one
+tenant); ``check_partition=True`` asserts this each tick and the
+``--runslow`` soak runs 8 tenants x 2000 VMs with a mid-wave failover
+under that assertion.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core import FTManager, VMInfo
+from repro.core.topology import REGISTRY, DistributionPlan, Flow
+
+from .cluster import WaveConfig
+from .engine import FlowSim, SimConfig
+from .traces import arrivals_for_second
+
+
+@dataclass
+class TickStats:
+    """One second of one tenant's replay (the golden-pinned stream)."""
+
+    t: int
+    rps: float
+    arrivals: int
+    completed: int
+    mean_response_s: float
+    p99_response_s: float
+    active_vms: int
+    provisioning_vms: int
+    ft_height: int
+
+
+@dataclass
+class TenantConfig:
+    """One tenant: a function id, its RPS trace and its scheduler knobs."""
+
+    function_id: str
+    trace: list[float]
+    seed: int = 0  # arrival-jitter seed (per tenant, so waves decorrelate)
+    function_duration_s: float = 2.0
+    vm_target_factor: float = 1.2
+    max_reserve_per_tick: int = 64
+
+
+@dataclass
+class MultiTenantConfig:
+    tenants: list[TenantConfig] = field(default_factory=list)
+    system: str = "faasnet"  # faasnet | baseline | on_demand
+    vm_pool_size: int = 2000
+    idle_reclaim_s: float = 7 * 60.0
+    registry_out_cap: float = 6.5e9  # region-scale registry (see workload.py)
+    registry_qps: float = 700.0
+    wave: WaveConfig = field(default_factory=WaveConfig)
+    # Scheduler failover: snapshot/json-round-trip/restore the FTManager at
+    # the *start* of this tick (None = never).  The replay must be
+    # bit-identical either way.
+    failover_at: Optional[int] = None
+    check_partition: bool = False  # assert pool partition every tick
+
+    def duration_s(self) -> int:
+        return max((len(t.trace) for t in self.tenants), default=0)
+
+
+@dataclass
+class TenantResult:
+    function_id: str
+    requests: int
+    completed: int
+    mean_response_s: float
+    p99_response_s: float
+    mean_prov_s: float
+    p99_prov_s: float
+    prov_makespan_s: float  # first reservation -> last container ready
+    peak_vms: int
+    provisioned: int
+
+
+@dataclass
+class MultiTenantResult:
+    system: str
+    per_tenant: dict[str, TenantResult]
+    timelines: dict[str, list[TickStats]]
+    peak_registry_egress: float  # bytes/s, shared across all tenants
+    prov_makespan_s: float  # whole-platform first reservation -> last ready
+    total_prov_time_s: float  # sum of all provisioning latencies
+    failovers: int
+    manager_stats: dict[str, int]
+    free_vms: int
+
+
+@dataclass
+class _Instance:
+    vm_id: str
+    busy_until: float = 0.0
+    idle_since: float = 0.0
+
+
+class _TenantState:
+    """Mutable per-tenant replay state (scheduler side)."""
+
+    def __init__(self, cfg: TenantConfig) -> None:
+        self.cfg = cfg
+        self.instances: dict[str, _Instance] = {}  # warm, by vm_id
+        self.provisioning: dict[str, float] = {}  # vm_id -> request time
+        self.flow_of: dict[str, object] = {}  # vm_id -> _FlowState
+        self.queue: deque[float] = deque()
+        self.responses: list[tuple[float, float]] = []  # (completion_t, latency)
+        self.prov_latencies: list[float] = []
+        self.first_req_t: float = float("inf")
+        self.last_ready_t: float = float("-inf")
+        self.requests: int = 0
+        self.peak_vms: int = 0
+        self.timeline: list[TickStats] = []
+
+
+def _pctl(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    return sorted_vals[int(q * (len(sorted_vals) - 1))]
+
+
+class MultiTenantReplay:
+    """N tenants replayed against one FlowSim + one FTManager-owned VM pool."""
+
+    def __init__(self, cfg: MultiTenantConfig) -> None:
+        if not cfg.tenants:
+            raise ValueError("multi-tenant replay needs at least one tenant")
+        fids = [t.function_id for t in cfg.tenants]
+        if len(set(fids)) != len(fids):
+            raise ValueError(f"duplicate tenant function ids: {fids}")
+        self.cfg = cfg
+        w = cfg.wave
+        self.sim = FlowSim(
+            SimConfig(
+                registry_out_cap=cfg.registry_out_cap,
+                registry_qps=cfg.registry_qps,
+                per_stream_cap=w.per_stream_cap,
+                hop_latency=w.hop_latency,
+            )
+        )
+        self.mgr = FTManager(vm_idle_reclaim_s=cfg.idle_reclaim_s)
+        for i in range(cfg.vm_pool_size):
+            self.mgr.add_free_vm(VMInfo(f"vm{i}"))
+        self.tenants: list[_TenantState] = [_TenantState(t) for t in cfg.tenants]
+        self.failovers = 0
+
+    # ------------------------------------------------------------------
+    # Scheduler failover (the tentpole's mid-wave snapshot/restore)
+    # ------------------------------------------------------------------
+    def _failover(self) -> None:
+        """Kill the scheduler: serialize, discard, restore from the wire copy.
+
+        The FlowSim (data plane) keeps running — in production the in-flight
+        image streams do not care which scheduler shard owns the metadata.
+        Only the control plane (trees, pool, counters) crosses the wire.
+        """
+        blob = json.dumps(self.mgr.snapshot(), sort_keys=True)
+        self.mgr = FTManager.restore(
+            json.loads(blob), vm_idle_reclaim_s=self.cfg.idle_reclaim_s
+        )
+        self.failovers += 1
+
+    # ------------------------------------------------------------------
+    # Provisioning (same per-system behaviour as workload.TraceReplay)
+    # ------------------------------------------------------------------
+    def _provision(self, ts: _TenantState, vm_id: str, now: float) -> None:
+        cfg, w = self.cfg, self.cfg.wave
+        fid = ts.cfg.function_id
+        payload = int(w.image_bytes * w.startup_fraction)
+        control = w.rpc.control_plane_total()
+        if cfg.system == "faasnet":
+            upstream = self.mgr.insert(fid, vm_id, now)
+            src = upstream if upstream is not None else REGISTRY
+            streaming = True
+        elif cfg.system in ("baseline", "on_demand"):
+            if cfg.system == "baseline":
+                payload = w.image_bytes
+            src = REGISTRY
+            streaming = cfg.system == "on_demand"
+            # keep the FT for height reporting + pool-partition parity
+            self.mgr.insert(fid, vm_id, now)
+        else:
+            raise ValueError(cfg.system)
+        plan = DistributionPlan(
+            flows=[Flow(src, vm_id, fid, payload)],
+            control_latency={vm_id: control},
+            streaming=streaming,
+        )
+        ts.provisioning[vm_id] = now
+        ts.first_req_t = min(ts.first_req_t, now)
+
+        def on_done(vm: str, t: float) -> None:
+            extract = (
+                w.image_bytes / w.image_extract_rate
+                if cfg.system == "baseline"
+                else w.rpc.image_load
+            )
+            ready = t + extract + w.container_start
+            self.sim.schedule(ready, lambda: self._activate(ts, vm, ready))
+
+        states = self.sim.add_plan(plan, t0=now, on_node_done=on_done)
+        if streaming and src != REGISTRY and src in ts.flow_of:
+            up = ts.flow_of[src]
+            if not up.done:  # type: ignore[attr-defined]
+                self.sim.set_parent(states[0], up)  # type: ignore[arg-type]
+        ts.flow_of[vm_id] = states[0]
+
+    def _activate(self, ts: _TenantState, vm_id: str, now: float) -> None:
+        t_req = ts.provisioning.pop(vm_id, now)
+        ts.prov_latencies.append(now - t_req)
+        ts.last_ready_t = max(ts.last_ready_t, now)
+        ts.instances[vm_id] = _Instance(vm_id, busy_until=now, idle_since=now)
+
+    def _reclaim(self, ts: _TenantState, now: float) -> None:
+        fid = ts.cfg.function_id
+        for vm_id, inst in list(ts.instances.items()):
+            if (
+                inst.busy_until <= now
+                and now - inst.idle_since >= self.cfg.idle_reclaim_s
+            ):
+                del ts.instances[vm_id]
+                ts.flow_of.pop(vm_id, None)
+                self.mgr.delete(fid, vm_id)
+                self.mgr.release_vm(vm_id)
+                self.mgr.stats["reclaims"] += 1
+
+    # ------------------------------------------------------------------
+    def _step_tenant(self, ts: _TenantState, t: int, now: float) -> None:
+        tc = ts.cfg
+        rps = tc.trace[t] if t < len(tc.trace) else 0.0
+        dur = tc.function_duration_s
+        n_arr = arrivals_for_second(rps, t, tc.seed)
+        ts.requests += n_arr
+        for _ in range(n_arr):
+            ts.queue.append(now)
+        completed = 0
+        lat_samples: list[float] = []
+        for inst in ts.instances.values():
+            if not ts.queue:
+                break
+            if inst.busy_until <= now:
+                arrival = ts.queue.popleft()
+                resp = (now - arrival) + dur
+                inst.busy_until = now + dur
+                inst.idle_since = now + dur
+                ts.responses.append((now + dur, resp))
+                lat_samples.append(resp)
+                completed += 1
+        # scale out against the *shared* pool (see workload.TraceReplay.run)
+        deficit = (
+            len(ts.queue)
+            - sum(1 for i in ts.instances.values() if i.busy_until <= now)
+            - len(ts.provisioning)
+        )
+        target = int(tc.vm_target_factor * max(rps, n_arr) * dur) + 1
+        headroom = target - (len(ts.instances) + len(ts.provisioning))
+        deficit = min(deficit, max(0, headroom))
+        for _ in range(min(max(0, deficit), tc.max_reserve_per_tick)):
+            vm = self.mgr.reserve_vm(now)
+            if vm is None:
+                break  # shared pool exhausted: the tenant waits
+            self._provision(ts, vm.vm_id, now)
+        self._reclaim(ts, now)
+        ts.peak_vms = max(ts.peak_vms, len(ts.instances) + len(ts.provisioning))
+        ft = self.mgr.trees.get(tc.function_id)
+        lat_samples.sort()
+        ts.timeline.append(
+            TickStats(
+                t=t,
+                rps=rps,
+                arrivals=n_arr,
+                completed=completed,
+                mean_response_s=(
+                    sum(lat_samples) / len(lat_samples) if lat_samples else 0.0
+                ),
+                p99_response_s=_pctl(lat_samples, 0.99),
+                active_vms=len(ts.instances) + len(ts.provisioning),
+                provisioning_vms=len(ts.provisioning),
+                ft_height=ft.height if ft is not None else 0,
+            )
+        )
+
+    def _check_partition(self) -> None:
+        """free_pool + per-tenant {warm, provisioning} partition the VM pool."""
+        free = list(self.mgr.free_pool)
+        free_set = set(free)
+        if len(free) != len(free_set):
+            raise AssertionError("duplicate vm ids in free_pool")
+        owned: set[str] = set()
+        for ts in self.tenants:
+            mine = set(ts.instances) | set(ts.provisioning)
+            overlap = mine & owned
+            if overlap:
+                raise AssertionError(f"vm owned by two tenants: {sorted(overlap)}")
+            ft = self.mgr.trees.get(ts.cfg.function_id)
+            members = set(ft.vm_ids()) if ft is not None else set()
+            if members != mine:
+                raise AssertionError(
+                    f"{ts.cfg.function_id}: tree/{{warm,provisioning}} mismatch: "
+                    f"tree-only={sorted(members - mine)} "
+                    f"tenant-only={sorted(mine - members)}"
+                )
+            owned |= mine
+        leak = owned & free_set
+        if leak:
+            raise AssertionError(f"vm both free and tenant-owned: {sorted(leak)}")
+        missing = set(self.mgr.vms) - owned - free_set
+        if missing:
+            raise AssertionError(f"vm lost (neither free nor owned): {sorted(missing)}")
+
+    # ------------------------------------------------------------------
+    def run(self) -> MultiTenantResult:
+        cfg = self.cfg
+        for t in range(cfg.duration_s()):
+            now = float(t)
+            if cfg.failover_at is not None and t == cfg.failover_at:
+                self._failover()
+            self.sim.run(until=now)  # advance flows/activations to this tick
+            for ts in self.tenants:  # fixed registration order: deterministic
+                self._step_tenant(ts, t, now)
+            if cfg.check_partition:
+                self._check_partition()
+        return self._result()
+
+    def _result(self) -> MultiTenantResult:
+        per_tenant: dict[str, TenantResult] = {}
+        first_req = float("inf")
+        last_ready = float("-inf")
+        total_prov = 0.0
+        for ts in self.tenants:
+            resp = sorted(lat for _, lat in ts.responses)
+            prov = sorted(ts.prov_latencies)
+            total_prov += sum(prov)
+            first_req = min(first_req, ts.first_req_t)
+            last_ready = max(last_ready, ts.last_ready_t)
+            per_tenant[ts.cfg.function_id] = TenantResult(
+                function_id=ts.cfg.function_id,
+                requests=ts.requests,
+                completed=len(resp),
+                mean_response_s=sum(resp) / len(resp) if resp else 0.0,
+                p99_response_s=_pctl(resp, 0.99),
+                mean_prov_s=sum(prov) / len(prov) if prov else 0.0,
+                p99_prov_s=_pctl(prov, 0.99),
+                prov_makespan_s=(
+                    ts.last_ready_t - ts.first_req_t if prov else 0.0
+                ),
+                peak_vms=ts.peak_vms,
+                provisioned=len(prov),
+            )
+        return MultiTenantResult(
+            system=self.cfg.system,
+            per_tenant=per_tenant,
+            timelines={ts.cfg.function_id: ts.timeline for ts in self.tenants},
+            peak_registry_egress=self.sim.peak_registry_egress,
+            prov_makespan_s=(
+                last_ready - first_req if last_ready > float("-inf") else 0.0
+            ),
+            total_prov_time_s=total_prov,
+            failovers=self.failovers,
+            manager_stats=dict(self.mgr.stats),
+            free_vms=len(self.mgr.free_pool),
+        )
+
+
+def run_multi_tenant(cfg: MultiTenantConfig) -> MultiTenantResult:
+    """One-shot convenience wrapper (mirrors ``repro.sim.scale.run_scale``)."""
+    return MultiTenantReplay(cfg).run()

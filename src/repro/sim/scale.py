@@ -67,6 +67,71 @@ def mega_burst_config(seed: int = 0, churn_ops: int = 200) -> ScaleConfig:
     )
 
 
+def multi_tenant_config(
+    seed: int = 0,
+    *,
+    n_tenants: int = 8,
+    vm_pool_size: int = 2000,
+    minutes: int = 25,
+    scale: float = 0.25,
+    system: str = "faasnet",
+    failover_at: int | None = 12 * 60,
+    check_partition: bool = False,
+) -> "MultiTenantConfig":
+    """The trace-driven companion of :func:`mega_burst_config` (§4.2 waves).
+
+    N tenants cycle through the four trace shapes — IoT, synthetic gaming,
+    diurnal (phase-staggered so peaks only partially overlap) and constant
+    background — all contending for one 2000-VM pool, one registry and one
+    FlowSim, with a scheduler failover mid-wave by default.  The returned
+    config drives :class:`repro.sim.multi_tenant.MultiTenantReplay`;
+    ``benchmarks/bench_trace_replay.py`` is its CLI twin and the
+    ``--runslow`` soak in ``tests/test_multi_tenant.py`` runs it with
+    ``check_partition=True``.
+    """
+    from .multi_tenant import MultiTenantConfig, TenantConfig
+    from .traces import (
+        constant_trace,
+        diurnal_trace,
+        iot_trace,
+        synthetic_gaming_trace,
+    )
+
+    duration = minutes * 60
+    tenants: list[TenantConfig] = []
+    for i in range(n_tenants):
+        kind = i % 4
+        if kind == 0:
+            trace = iot_trace(scale=scale)[:duration]
+            name = "iot"
+        elif kind == 1:
+            trace = synthetic_gaming_trace(scale=4 * scale)[:duration]
+            name = "gaming"
+        elif kind == 2:
+            trace = diurnal_trace(
+                duration_s=duration, phase_s=150 * i, scale=4 * scale
+            )
+            name = "diurnal"
+        else:
+            trace = constant_trace(duration_s=duration, scale=4 * scale)
+            name = "constant"
+        tenants.append(
+            TenantConfig(
+                function_id=f"{name}{i}",
+                trace=trace,
+                seed=seed * 1000 + i,  # decorrelated arrival jitter per tenant
+            )
+        )
+    return MultiTenantConfig(
+        tenants=tenants,
+        system=system,
+        vm_pool_size=vm_pool_size,
+        idle_reclaim_s=7 * 60.0,
+        failover_at=failover_at,
+        check_partition=check_partition,
+    )
+
+
 @dataclass
 class ScaleResult:
     makespan: float  # sim seconds: last payload fully fetched

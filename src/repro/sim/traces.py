@@ -13,7 +13,13 @@ published descriptions:
     (+62 VMs → 102 VMs, height 7).
 
 Each trace is a list of per-second request rates (RPS).  A deterministic
-LCG jitters arrivals so runs are reproducible.
+LCG jitters arrivals so runs are reproducible.  Two synthetic tenants —
+``constant_trace`` and ``diurnal_trace`` — round out the multi-tenant mix
+(`repro.sim.multi_tenant`): a steady background and a staggered day/night
+cycle that overlap the IoT/gaming bursts.
+
+All four generators and the arrival jitter are pinned by golden checksums
+in ``tests/test_traces.py`` — their shapes cannot silently drift.
 """
 from __future__ import annotations
 
@@ -50,6 +56,39 @@ def synthetic_gaming_trace(*, duration_s: int = 30 * 60, scale: float = 1.0) -> 
         rps[t] = 125.0  # burst 2, slightly larger (tree 30 → 102 VMs)
     _ramp(rps, 125, 1, 24 * m, 25 * m)
     return [r * scale for r in rps]
+
+
+def constant_trace(*, duration_s: int = 10 * 60, rps: float = 20.0, scale: float = 1.0) -> list[float]:
+    """Steady background tenant: a flat RPS floor for the whole timeline.
+
+    The multi-tenant replay uses it as the always-on tenant the bursty IoT
+    and gaming tenants contend with for registry egress and the VM pool.
+    """
+    return [rps * scale] * duration_s
+
+
+def diurnal_trace(
+    *,
+    duration_s: int = 30 * 60,
+    base_rps: float = 4.0,
+    peak_rps: float = 64.0,
+    period_s: int = 20 * 60,
+    phase_s: int = 0,
+    scale: float = 1.0,
+) -> list[float]:
+    """Day/night tenant compressed to minutes: half-sinusoid days, flat nights.
+
+    ``rps(t) = base + (peak - base) * max(0, sin(2pi (t + phase) / period))``
+    — the positive sine half-cycle is the "day" ramp, the clipped negative
+    half is the quiet "night" at ``base_rps``.  ``phase_s`` staggers tenants
+    so their peaks overlap partially, the contention pattern the paper's
+    trace-driven evaluation (§4.2) exercises.
+    """
+    out = []
+    for t in range(duration_s):
+        x = math.sin(2 * math.pi * ((t + phase_s) / period_s))
+        out.append((base_rps + (peak_rps - base_rps) * max(0.0, x)) * scale)
+    return out
 
 
 def arrivals_for_second(rps: float, t: int, seed: int = 0) -> int:

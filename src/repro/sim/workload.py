@@ -1,25 +1,28 @@
-"""Application-level trace replay (paper §4.2, Figures 11-13).
+"""Single-tenant trace replay (paper §4.2, Figures 11-13).
 
-Replays an RPS timeline against a simulated FaaS platform: a free VM pool,
-a scheduler with an :class:`FTManager`, per-system provisioning over one
-shared :class:`FlowSim` (so overlapping waves contend for the registry and
-NICs exactly as in production), warm-instance serving with per-request
-FIFO queueing, and idle-VM reclaim.
+:class:`TraceReplay` replays one RPS timeline against the simulated FaaS
+platform.  It is a thin facade over
+:class:`repro.sim.multi_tenant.MultiTenantReplay` with exactly one tenant —
+ONE code path implements arrivals, FIFO serving, scale-out, per-system
+provisioning over the shared :class:`FlowSim`, and idle reclaim, so the
+single-tenant figures and the multi-tenant harness can never diverge.
 
 Resolution is one-second ticks for arrivals/serving; provisioning data
 flows evolve in continuous time inside the FlowSim.
 """
 from __future__ import annotations
 
-from collections import deque
 from dataclasses import dataclass, field
 
-from repro.core import FTManager, FunctionTree, VMInfo
-from repro.core.topology import REGISTRY, DistributionPlan, Flow
-
 from .cluster import WaveConfig
-from .engine import FlowSim, SimConfig
-from .traces import arrivals_for_second
+from .multi_tenant import (
+    MultiTenantConfig,
+    MultiTenantReplay,
+    TenantConfig,
+    TickStats,
+)
+
+__all__ = ["ReplayConfig", "TickStats", "TraceReplay"]
 
 
 @dataclass
@@ -43,174 +46,57 @@ class ReplayConfig:
     seed: int = 0
 
 
-@dataclass
-class TickStats:
-    t: int
-    rps: float
-    arrivals: int
-    completed: int
-    mean_response_s: float
-    p99_response_s: float
-    active_vms: int
-    provisioning_vms: int
-    ft_height: int
-
-
-@dataclass
-class _Instance:
-    vm_id: str
-    busy_until: float = 0.0
-    idle_since: float = 0.0
-
-
 class TraceReplay:
+    """Replay one tenant's RPS trace; see :class:`MultiTenantReplay`."""
+
     def __init__(self, cfg: ReplayConfig) -> None:
         self.cfg = cfg
-        w = cfg.wave
-        self.sim = FlowSim(
-            SimConfig(
-                registry_out_cap=cfg.registry_out_cap,
-                registry_qps=cfg.registry_qps,
-                per_stream_cap=w.per_stream_cap,
-                hop_latency=w.hop_latency,
-            )
-        )
-        self.mgr = FTManager(vm_idle_reclaim_s=cfg.idle_reclaim_s)
-        for i in range(cfg.vm_pool_size):
-            self.mgr.add_free_vm(VMInfo(f"vm{i}"))
-        self.instances: dict[str, _Instance] = {}  # warm, by vm_id
-        self.provisioning: dict[str, float] = {}  # vm_id -> request time
-        self._flow_of: dict[str, object] = {}  # vm_id -> _FlowState
-        self.queue: deque[float] = deque()  # arrival times of waiting requests
+        self.timeline: list[TickStats] = []
         self.responses: list[tuple[float, float]] = []  # (completion_t, latency)
         self.prov_latencies: list[float] = []
-        self.timeline: list[TickStats] = []
-
-    # ------------------------------------------------------------------
-    def _provision(self, vm_id: str, now: float) -> None:
-        """Kick off provisioning of one VM at sim-time ``now``."""
-        cfg, w = self.cfg, self.cfg.wave
-        payload = int(w.image_bytes * w.startup_fraction)
-        control = w.rpc.control_plane_total()
-        if cfg.system == "faasnet":
-            upstream = self.mgr.insert(cfg.function_id, vm_id, now)
-            src = upstream if upstream is not None else REGISTRY
-            streaming = True
-        elif cfg.system in ("baseline", "on_demand"):
-            if cfg.system == "baseline":
-                payload = w.image_bytes
-            src = REGISTRY
-            streaming = cfg.system == "on_demand"
-            # keep the FT for height reporting parity even if unused
-            self.mgr.insert(cfg.function_id, vm_id, now)
-        else:
-            raise ValueError(cfg.system)
-        plan = DistributionPlan(
-            flows=[Flow(src, vm_id, "img", payload)],
-            control_latency={vm_id: control},
-            streaming=streaming,
-        )
-        self.provisioning[vm_id] = now
-
-        def on_done(vm: str, t: float) -> None:
-            extract = (
-                w.image_bytes / w.image_extract_rate
-                if cfg.system == "baseline"
-                else w.rpc.image_load
-            )
-            ready = t + extract + w.container_start
-            self.sim.schedule(ready, lambda: self._activate(vm, ready))
-
-        states = self.sim.add_plan(plan, t0=now, on_node_done=on_done)
-        # streaming dependency on the parent's still-running flow, if any
-        if streaming and src != REGISTRY and src in self._flow_of:
-            up = self._flow_of[src]
-            if not up.done:  # type: ignore[attr-defined]
-                # registered via the engine so parent rate changes propagate
-                self.sim.set_parent(states[0], up)  # type: ignore[arg-type]
-        self._flow_of[vm_id] = states[0]
-
-    def _activate(self, vm_id: str, now: float) -> None:
-        t_req = self.provisioning.pop(vm_id, now)
-        self.prov_latencies.append(now - t_req)
-        self.instances[vm_id] = _Instance(vm_id, busy_until=now, idle_since=now)
-
-    def _reclaim(self, now: float) -> None:
-        cfg = self.cfg
-        for vm_id, inst in list(self.instances.items()):
-            if inst.busy_until <= now and now - inst.idle_since >= cfg.idle_reclaim_s:
-                del self.instances[vm_id]
-                self._flow_of.pop(vm_id, None)
-                self.mgr.delete(cfg.function_id, vm_id)
-                self.mgr.release_vm(vm_id)
-                self.mgr.stats["reclaims"] += 1
+        self._first_req_t: float = float("inf")
+        self._last_ready_t: float = float("-inf")
+        self.sim = None  # the shared FlowSim, exposed after run()
+        self.mgr = None  # the FTManager, exposed after run()
 
     # ------------------------------------------------------------------
     def run(self, rps_trace: list[float]) -> list[TickStats]:
         cfg = self.cfg
-        dur = cfg.function_duration_s
-        for t, rps in enumerate(rps_trace):
-            now = float(t)
-            self.sim.run(until=now)  # advance flows/activations to this tick
-            # arrivals
-            n_arr = arrivals_for_second(rps, t, cfg.seed)
-            for _ in range(n_arr):
-                self.queue.append(now)
-            # serve from queue with idle instances
-            completed = 0
-            lat_samples: list[float] = []
-            for inst in self.instances.values():
-                if not self.queue:
-                    break
-                if inst.busy_until <= now:
-                    arrival = self.queue.popleft()
-                    resp = (now - arrival) + dur
-                    inst.busy_until = now + dur
-                    inst.idle_since = now + dur
-                    self.responses.append((now + dur, resp))
-                    lat_samples.append(resp)
-                    completed += 1
-            # scale out if backlog remains: each in-flight provisioning VM
-            # will absorb one queued request when it comes up, so the deficit
-            # is backlog minus idle capacity minus in-flight reservations.
-            deficit = (
-                len(self.queue)
-                - sum(1 for i in self.instances.values() if i.busy_until <= now)
-                - len(self.provisioning)
+        replay = MultiTenantReplay(
+            MultiTenantConfig(
+                tenants=[
+                    TenantConfig(
+                        function_id=cfg.function_id,
+                        trace=list(rps_trace),
+                        seed=cfg.seed,
+                        function_duration_s=cfg.function_duration_s,
+                        vm_target_factor=cfg.vm_target_factor,
+                        max_reserve_per_tick=cfg.max_reserve_per_tick,
+                    )
+                ],
+                system=cfg.system,
+                vm_pool_size=cfg.vm_pool_size,
+                idle_reclaim_s=cfg.idle_reclaim_s,
+                registry_out_cap=cfg.registry_out_cap,
+                registry_qps=cfg.registry_qps,
+                wave=cfg.wave,
             )
-            # cap total footprint at ~target_factor × concurrency demand
-            # (Little's law: rps × service time)
-            target = int(cfg.vm_target_factor * max(rps, n_arr) * dur) + 1
-            headroom = target - (len(self.instances) + len(self.provisioning))
-            deficit = min(deficit, max(0, headroom))
-            for _ in range(min(max(0, deficit), cfg.max_reserve_per_tick)):
-                vm = self.mgr.reserve_vm(now)
-                if vm is None:
-                    break
-                self._provision(vm.vm_id, now)
-            self._reclaim(now)
-            ft = self.mgr.trees.get(cfg.function_id)
-            lat_samples.sort()
-            self.timeline.append(
-                TickStats(
-                    t=t,
-                    rps=rps,
-                    arrivals=n_arr,
-                    completed=completed,
-                    mean_response_s=(
-                        sum(lat_samples) / len(lat_samples) if lat_samples else 0.0
-                    ),
-                    p99_response_s=(
-                        lat_samples[int(0.99 * (len(lat_samples) - 1))]
-                        if lat_samples
-                        else 0.0
-                    ),
-                    active_vms=len(self.instances) + len(self.provisioning),
-                    provisioning_vms=len(self.provisioning),
-                    ft_height=ft.height if ft is not None else 0,
-                )
-            )
+        )
+        replay.run()
+        tenant = replay.tenants[0]
+        self.sim, self.mgr = replay.sim, replay.mgr
+        self.timeline = tenant.timeline
+        self.responses = tenant.responses
+        self.prov_latencies = tenant.prov_latencies
+        self._first_req_t = tenant.first_req_t
+        self._last_ready_t = tenant.last_ready_t
         return self.timeline
+
+    def prov_makespan_s(self) -> float:
+        """First reservation -> last container ready (0 if nothing provisioned)."""
+        if not self.prov_latencies:
+            return 0.0
+        return self._last_ready_t - self._first_req_t
 
     # ------------------------------------------------------------------
     def recovery_time(self, burst_t: int, normal_s: float = 3.0) -> float:

@@ -258,3 +258,112 @@ def test_free_pool_is_deque_and_snapshot_roundtrips():
     assert list(m2.free_pool) == snap["free_pool"]
     m2.release_vm(m2.reserve_vm().vm_id)  # guard state restored too
     assert len(list(m2.free_pool)) == len(set(m2.free_pool))
+
+
+# ----------------------------------------------------------------------
+# Snapshot/restore round-trip after random churn (scheduler failover)
+# ----------------------------------------------------------------------
+def _churned_manager(seed: int, steps: int = 400):
+    """Random reserve/insert/delete/on_vm_failure churn through the manager."""
+    import random
+
+    rng = random.Random(seed)
+    m = _mgr(n_vms=80, max_functions_per_vm=6)
+    fids = [f"f{j}" for j in range(6)]
+    placed: list[tuple[str, str]] = []  # (fid, vm_id) pairs currently in trees
+    for step in range(steps):
+        op = rng.random()
+        if op < 0.45:  # reserve a fresh VM and place a function on it
+            vm = m.reserve_vm(float(step))
+            if vm is None:
+                continue
+            fid = fids[rng.randrange(len(fids))]
+            m.insert(fid, vm.vm_id, float(step))
+            placed.append((fid, vm.vm_id))
+        elif op < 0.65 and placed:  # co-locate on an already-active VM
+            fid, vm_id = placed[rng.randrange(len(placed))]
+            other = fids[rng.randrange(len(fids))]
+            vm = m.vms[vm_id]
+            if other not in vm.functions and len(vm.functions) < 6:
+                m.insert(other, vm_id, float(step))
+                placed.append((other, vm_id))
+        elif op < 0.9 and placed:  # graceful leave (reclaim path)
+            fid, vm_id = placed.pop(rng.randrange(len(placed)))
+            m.delete(fid, vm_id)
+            vm = m.vms[vm_id]
+            if not vm.functions and vm.alive:
+                m.release_vm(vm_id)
+        elif placed:  # heartbeat miss: drop the VM from every tree
+            vm_id = placed[rng.randrange(len(placed))][1]
+            m.on_vm_failure(vm_id)
+            placed = [(f, v) for f, v in placed if v != vm_id]
+    for ft in m.trees.values():
+        ft.check_invariants()
+    return m
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_snapshot_restore_after_random_churn(seed):
+    """A restored manager reproduces trees, seed loads and future placement.
+
+    The failover contract of `repro.sim.multi_tenant`: after arbitrary
+    churn, snapshot -> json round-trip -> restore must yield a manager
+    whose tree_stats, topologies, free pool, seed loads, telemetry counters
+    and next-K `pick_vm_for` decisions are bit-identical to the original's.
+    """
+    import json
+
+    m = _churned_manager(seed)
+    r = FTManager.restore(
+        json.loads(json.dumps(m.snapshot(), sort_keys=True)),
+        max_functions_per_vm=6,
+    )
+    assert r.tree_stats() == m.tree_stats()
+    for fid, ft in m.trees.items():
+        assert r.trees[fid].to_dict() == ft.to_dict()
+    assert list(r.free_pool) == list(m.free_pool)
+    assert r.stats == m.stats
+    for vid in m.vms:
+        want = m._seed_load_recompute(vid)
+        assert m._seed_loads.get(vid, 0) == want  # incremental stayed exact
+        assert r._seed_loads.get(vid, 0) == want  # and the restore rebuilt it
+    # Next K placement decisions bit-identical, applying each to both sides
+    # (a pick mutates nothing, but the follow-up insert does).
+    for k in range(25):
+        fid = f"pick{k}"
+        a = m.pick_vm_for(fid, now=1e6 + k)
+        b = r.pick_vm_for(fid, now=1e6 + k)
+        assert (a is None) == (b is None), fid
+        if a is None:
+            break
+        assert a.vm_id == b.vm_id, fid
+        if len(a.functions) < 6:
+            m.insert(fid, a.vm_id, now=1e6 + k)
+            r.insert(fid, b.vm_id, now=1e6 + k)
+
+
+def test_snapshot_records_vm_order_and_stats():
+    """The placement tie-break order and telemetry counters cross the wire."""
+    m = _mgr(n_vms=4)
+    for _ in range(3):
+        m.insert("f", m.reserve_vm().vm_id)
+    snap = m.snapshot()
+    assert snap["vm_order"] == [f"vm{i}" for i in range(4)]
+    assert snap["stats"]["inserts"] == 3 and snap["stats"]["reservations"] == 3
+    m2 = FTManager.restore(snap)
+    assert m2.stats == m.stats
+    assert m2._vm_order == m._vm_order
+
+
+def test_restore_accepts_legacy_snapshot():
+    """Snapshots without vm_order/stats (pre-failover format) still restore."""
+    m = _mgr(n_vms=3)
+    m.insert("f", m.reserve_vm().vm_id)
+    snap = m.snapshot()
+    del snap["vm_order"], snap["stats"]
+    for v in snap["vms"].values():
+        del v["mem_mb"]
+    m2 = FTManager.restore(snap)
+    assert m2.tree_stats() == m.tree_stats()
+    assert m2._vm_order == m._vm_order  # falls back to vms insertion order
+    assert m2.vms["vm0"].mem_mb == 4096

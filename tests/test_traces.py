@@ -1,0 +1,132 @@
+"""Golden determinism for the workload traces and the arrival jitter.
+
+The multi-tenant replay's bit-determinism rests on these generators: if the
+LCG jitter or a ramp shape drifts, every downstream golden test silently
+re-baselines.  So the four trace generators are pinned by SHA-256 checksums
+over their full (9-decimal-rounded) value streams, plus spot samples at the
+paper's named inflection points, and ``arrivals_for_second`` is pinned by an
+exact 24-second sample sequence.
+"""
+import hashlib
+
+from repro.sim import (
+    constant_trace,
+    diurnal_trace,
+    iot_trace,
+    synthetic_gaming_trace,
+)
+from repro.sim.traces import arrivals_for_second
+
+
+def _digest(trace: list[float]) -> str:
+    return hashlib.sha256(",".join(f"{v:.9f}" for v in trace).encode()).hexdigest()
+
+
+# ----------------------------------------------------------------------
+# Golden checksums (full streams)
+# ----------------------------------------------------------------------
+def test_iot_trace_checksum():
+    tr = iot_trace()
+    assert len(tr) == 55 * 60
+    assert _digest(tr) == (
+        "324f033fa6fb8e89800673bca4ef1fe4db015e01c5397894e385e93d7563c1c6"
+    )
+
+
+def test_gaming_trace_checksum():
+    tr = synthetic_gaming_trace()
+    assert len(tr) == 30 * 60
+    assert _digest(tr) == (
+        "17874d5eeb5f842629267b5cca70e5b0633ea1b001a048299a7cec38b6649c3a"
+    )
+
+
+def test_constant_trace_checksum():
+    tr = constant_trace()
+    assert len(tr) == 10 * 60
+    assert _digest(tr) == (
+        "fd7c99143e07746f3eb4f90c77db8e1b43ae4e98a96b04b55786ef6d0da73135"
+    )
+
+
+def test_diurnal_trace_checksum():
+    tr = diurnal_trace()
+    assert len(tr) == 30 * 60
+    assert _digest(tr) == (
+        "4985b33e578e14078ecd3d27f189ee6823939c262ce2fb3eca86d2367dae8e75"
+    )
+
+
+# ----------------------------------------------------------------------
+# Ramp shapes at the paper's named inflection points
+# ----------------------------------------------------------------------
+def test_iot_trace_shape():
+    tr = iot_trace()
+    m = 60
+    assert tr[0] == 10.0 and tr[9 * m] == 10.0  # quiet until burst 1
+    assert tr[570] == 180.0  # mid-ramp of the 9->10 min rise
+    assert abs(tr[10 * m] - 359.913219) < 1e-6  # 300-400 RPS plateau start
+    assert abs(tr[20 * m] - 369.432855) < 1e-6  # mid-plateau sinusoid
+    assert tr[28 * m] == 350.0 and tr[29 * m + 30] == 10.0  # decay done
+    assert tr[40 * m + 30] == 55.0  # burst 2 step to 100...
+    assert tr[42 * m] == 250.0 and tr[43 * m] == 400.0  # ...then jump to 400
+    assert tr[-1] == 400.0
+
+
+def test_gaming_trace_shape():
+    tr = synthetic_gaming_trace()
+    m = 60
+    assert tr[0] == 1.0
+    assert tr[11 * m] == 100.0 and tr[12 * m] == 100.0  # sharp burst 1
+    assert tr[13 * m + 30] == 50.5  # halfway down the decay ramp
+    assert tr[15 * m] == 1.0  # reclaim window between bursts
+    assert tr[21 * m] == 125.0 and tr[23 * m] == 125.0  # larger burst 2
+    assert tr[24 * m + 30] == 63.0 and tr[29 * m] == 1.0
+
+
+def test_diurnal_trace_shape():
+    tr = diurnal_trace()  # base 4, peak 64, period 20 min
+    assert tr[0] == 4.0  # sin(0) clipped day-start
+    assert tr[300] == 64.0  # quarter-period: peak of the day half-cycle
+    assert abs(tr[600] - 4.0) < 1e-12  # sin(pi) rounding: day/night boundary
+    assert tr[900] == 4.0  # clipped night half-cycle
+    assert tr[1500] == 64.0  # next day's peak
+    assert min(tr) == 4.0 and max(tr) == 64.0
+
+
+def test_trace_scale_is_linear():
+    for gen in (iot_trace, synthetic_gaming_trace, constant_trace, diurnal_trace):
+        base = gen()
+        doubled = gen(scale=2.0)
+        assert doubled == [2 * v for v in base]
+
+
+# ----------------------------------------------------------------------
+# Arrival jitter (the LCG every replay's determinism hangs on)
+# ----------------------------------------------------------------------
+def test_arrivals_pinned_sequence():
+    assert [arrivals_for_second(33.7, t, seed=5) for t in range(24)] == [
+        34, 34, 33, 34, 34, 33, 34, 34, 33, 34, 34, 33,
+        34, 34, 33, 34, 34, 33, 34, 34, 33, 34, 34, 33,
+    ]
+    assert [arrivals_for_second(10 / 3, t, seed=0) for t in range(24)] == [
+        4, 3, 4, 3, 3, 4, 3, 3, 4, 3, 3, 4,
+        3, 3, 4, 3, 3, 4, 3, 3, 4, 3, 3, 4,
+    ]
+
+
+def test_arrivals_mean_tracks_rps():
+    """Jittered rounding is unbiased: the long-run mean approaches the RPS."""
+    for rps in (0.3, 7.5, 33.7):
+        n = 5000
+        total = sum(arrivals_for_second(rps, t, seed=1) for t in range(n))
+        assert abs(total / n - rps) < 0.05 * max(1.0, rps)
+
+
+def test_arrivals_integer_floor_and_seed_sensitivity():
+    assert all(
+        arrivals_for_second(5.0, t) == 5 for t in range(50)
+    )  # integral rps: no jitter
+    seq_a = [arrivals_for_second(2.5, t, seed=0) for t in range(64)]
+    seq_b = [arrivals_for_second(2.5, t, seed=1) for t in range(64)]
+    assert seq_a != seq_b  # seeds genuinely decorrelate tenants
