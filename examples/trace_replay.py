@@ -8,6 +8,13 @@ Multi-tenant (overlapping IoT/gaming/diurnal/constant waves on one shared
 registry + VM pool, with a mid-wave scheduler failover)::
 
     PYTHONPATH=src python examples/trace_replay.py --multi [--tenants 8]
+
+Either mode accepts a sharded registry — e.g. 4 replicas with round-robin
+fetchers (each shard keeps the full per-replica egress/QPS, so shards add
+capacity)::
+
+    PYTHONPATH=src python examples/trace_replay.py \
+        --registry-shards 4 --shard-policy replicated
 """
 import argparse
 import sys
@@ -16,18 +23,40 @@ sys.path.insert(0, "src")
 
 import statistics as st
 
-from repro.sim import ReplayConfig, TraceReplay, iot_trace
+from repro.core.registry import PLACEMENT_POLICIES
+from repro.sim import RegistrySpec, ReplayConfig, TraceReplay, iot_trace
+
+
+def _registry_spec(args, base) -> "RegistrySpec | None":
+    """None for the stock 1-shard registry (bit-identical legacy path).
+
+    ``base`` is the mode's own config (ReplayConfig / MultiTenantConfig):
+    each shard keeps that config's full per-replica egress cap and QPS.
+    """
+    if args.registry_shards == 1 and args.shard_policy == "hash_by_function":
+        return None
+    return RegistrySpec(
+        shards=args.registry_shards,
+        egress_cap=base.registry_out_cap,
+        qps=base.registry_qps,
+        policy=args.shard_policy,
+    )
 
 
 def single_tenant(args) -> None:
     trace = iot_trace(scale=args.scale)[: args.minutes * 60]
     burst_t = 9 * 60
+    spec = _registry_spec(args, ReplayConfig())
     print(f"IoT trace: {args.minutes} min at {args.scale:.2f} scale "
           f"(peak {max(trace):.0f} RPS)")
+    if spec is not None:
+        print(f"registry: {spec.shards} shard(s), policy={spec.policy}")
     print(f"{'system':12s} {'peak resp':>10s} {'recovery':>9s} "
           f"{'prov mean':>10s} {'VMs used':>9s}")
     for system in ("faasnet", "on_demand", "baseline"):
-        r = TraceReplay(ReplayConfig(system=system, idle_reclaim_s=420))
+        r = TraceReplay(
+            ReplayConfig(system=system, idle_reclaim_s=420, registry=spec)
+        )
         tl = r.run(trace)
         peak = max(ts.mean_response_s for ts in tl if ts.t >= burst_t)
         rec = r.recovery_time(burst_t + 60, normal_s=3.5)
@@ -38,8 +67,9 @@ def single_tenant(args) -> None:
 
 
 def multi_tenant(args) -> None:
-    from repro.sim import MultiTenantReplay, multi_tenant_config
+    from repro.sim import MultiTenantConfig, MultiTenantReplay, multi_tenant_config
 
+    spec = _registry_spec(args, MultiTenantConfig())
     results = {}
     for system in ("faasnet", "baseline"):
         cfg = multi_tenant_config(
@@ -50,10 +80,13 @@ def multi_tenant(args) -> None:
             scale=args.multi_scale,
             system=system,
             failover_at=args.minutes * 30,  # mid-run scheduler failover
+            registry=spec,
         )
         results[system] = MultiTenantReplay(cfg).run()
     res = results["faasnet"]
-    print(f"{args.tenants} tenants sharing {args.pool} VMs + one registry, "
+    shards = spec.shards if spec is not None else 1
+    print(f"{args.tenants} tenants sharing {args.pool} VMs + a "
+          f"{shards}-shard registry, "
           f"{args.minutes} min, scheduler failover at t={args.minutes * 30}s "
           f"(failovers={res.failovers})")
     print(f"{'tenant':12s} {'requests':>8s} {'p99 resp':>9s} {'p99 prov':>9s} "
@@ -78,6 +111,12 @@ def main() -> None:
     ap.add_argument("--pool", type=int, default=2000)
     ap.add_argument("--multi-scale", type=float, default=0.25,
                     help="trace scale for --multi (the IoT tenant's factor)")
+    ap.add_argument("--registry-shards", type=int, default=1,
+                    help="registry shard/replica count (each shard keeps the "
+                         "full per-replica egress cap and QPS)")
+    ap.add_argument("--shard-policy", default="hash_by_function",
+                    choices=PLACEMENT_POLICIES,
+                    help="blob placement across shards")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.multi:

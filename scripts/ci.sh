@@ -68,4 +68,48 @@ print(
 )
 PY
 
+# Registry shard-sweep smoke: per-shard egress accounting must not silently
+# regress to a single aggregate cap.  With 4 replicated shards the baseline
+# (registry-bound) wave must speed up >= 2x while faasnet (NIC-bound at the
+# root) moves < 5% — the paper's §4.3 bottleneck-removal claim in miniature.
+python - <<'PY'
+import time
+from repro.sim import RegistrySpec, WaveConfig, provision_wave
+from repro.sim.engine import GBPS
+
+t0 = time.perf_counter()
+def makespan(system, shards):
+    cfg = WaveConfig(
+        per_stream_cap=float("inf"),
+        registry=RegistrySpec(
+            shards=shards, egress_cap=9.5 * GBPS, qps=1100.0, policy="replicated"
+        ),
+    )
+    return max(provision_wave(system, 64, cfg).values())
+
+b1, b4 = makespan("baseline", 1), makespan("baseline", 4)
+f1, f4 = makespan("faasnet", 1), makespan("faasnet", 4)
+elapsed = time.perf_counter() - t0
+speedup = b1 / b4
+drift = abs(f4 - f1) / f1 * 100.0
+assert speedup >= 2.0, (
+    f"registry smoke FAILED: baseline only sped up {speedup:.2f}x with 4 "
+    f"shards ({b1:.1f}s -> {b4:.1f}s) — per-shard egress accounting has "
+    f"regressed to an aggregate cap"
+)
+assert drift < 5.0, (
+    f"registry smoke FAILED: faasnet moved {drift:.1f}% with 4 shards "
+    f"({f1:.2f}s -> {f4:.2f}s) — it should be insensitive to registry "
+    f"bandwidth"
+)
+budget = 10.0
+assert elapsed < budget, (
+    f"registry smoke FAILED: sweep took {elapsed:.2f} s (budget {budget} s)"
+)
+print(
+    f"registry smoke ok: baseline {speedup:.2f}x faster with 4 shards, "
+    f"faasnet drift {drift:.2f}%, in {elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

@@ -10,6 +10,13 @@ blockstore functionality.
 from .ft_manager import FTManager, VMInfo
 from .function_tree import FTNode, FunctionTree
 from .provisioning import ProvisionState, ProvisionTask, RPCCosts
+from .registry import (
+    PLACEMENT_POLICIES,
+    RegistrySpec,
+    ShardResolver,
+    is_registry_node,
+    shard_index,
+)
 from .topology import (
     REGISTRY,
     DistributionPlan,
@@ -58,6 +65,11 @@ __all__ = [
     "ProvisionTask",
     "RPCCosts",
     "REGISTRY",
+    "PLACEMENT_POLICIES",
+    "RegistrySpec",
+    "ShardResolver",
+    "is_registry_node",
+    "shard_index",
     "DistributionPlan",
     "Flow",
     "baseline_plan",

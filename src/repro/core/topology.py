@@ -24,8 +24,19 @@ import random
 from dataclasses import dataclass, field
 
 from .function_tree import FunctionTree
+from .registry import (  # noqa: F401  (REGISTRY re-exported for compat)
+    REGISTRY,
+    RegistrySpec,
+    ShardResolver,
+    as_resolver,
+)
 
-REGISTRY = "__registry__"  # pseudo-node: the central backing store
+# Every registry-sourced plan builder takes ``registry`` — a
+# :class:`RegistrySpec`, a shared :class:`ShardResolver`, or ``None`` for the
+# legacy single-shard registry — and emits flows whose source is a concrete
+# shard id (the 1-shard id *is* the legacy ``__registry__`` sentinel, so
+# default plans are unchanged).  Pass one resolver across plans when a
+# stateful policy (least_loaded / replicated) must see every assignment.
 
 
 @dataclass(frozen=True)
@@ -64,19 +75,22 @@ def faasnet_plan(
     startup_fraction: float = 1.0,
     manifest_latency: float = 0.010,
     piece: str = "img",
+    registry: RegistrySpec | ShardResolver | None = None,
 ) -> DistributionPlan:
-    """Blocks stream down FT edges; root fetches from the registry.
+    """Blocks stream down FT edges; root fetches from its blob's shard.
 
     ``startup_fraction`` < 1 models on-demand fetch: only that fraction of
     the payload must arrive before the container can start (§3.5).
     ``piece`` labels the payload — pass the function id when many FTs share
-    one simulation so flows stay distinguishable in traces and logs.
+    one simulation so flows stay distinguishable in traces and logs (it is
+    also the blob key the shard resolver hashes under ``hash_by_function``).
     """
     need = int(image_bytes * startup_fraction)
+    resolver = as_resolver(registry)
     flows = []
     control = {}
     for node in ft.bfs():
-        up = ft.parent_of(node.vm_id) or REGISTRY
+        up = ft.parent_of(node.vm_id) or resolver.source_for(piece, nbytes=need)
         flows.append(Flow(up, node.vm_id, piece, need))
         control[node.vm_id] = manifest_latency  # fetch .tar manifest from MDS
     return DistributionPlan(flows=flows, control_latency=control, streaming=True)
@@ -85,9 +99,19 @@ def faasnet_plan(
 # ----------------------------------------------------------------------
 # Centralized baselines
 # ----------------------------------------------------------------------
-def baseline_plan(nodes: list[str], *, image_bytes: int) -> DistributionPlan:
-    """docker pull: whole image from the registry, no streaming start."""
-    flows = [Flow(REGISTRY, n, "img", image_bytes) for n in nodes]
+def baseline_plan(
+    nodes: list[str],
+    *,
+    image_bytes: int,
+    piece: str = "img",
+    registry: RegistrySpec | ShardResolver | None = None,
+) -> DistributionPlan:
+    """docker pull: whole image from its registry shard, no streaming start."""
+    resolver = as_resolver(registry)
+    flows = [
+        Flow(resolver.source_for(piece, nbytes=image_bytes), n, piece, image_bytes)
+        for n in nodes
+    ]
     return DistributionPlan(flows=flows, streaming=False)
 
 
@@ -97,10 +121,16 @@ def on_demand_plan(
     image_bytes: int,
     startup_fraction: float,
     manifest_latency: float = 0.010,
+    piece: str = "img",
+    registry: RegistrySpec | ShardResolver | None = None,
 ) -> DistributionPlan:
-    """Registry-served lazy fetch: less data, same central bottleneck."""
+    """Registry-served lazy fetch: less data, same per-shard bottleneck."""
     need = int(image_bytes * startup_fraction)
-    flows = [Flow(REGISTRY, n, "img", need) for n in nodes]
+    resolver = as_resolver(registry)
+    flows = [
+        Flow(resolver.source_for(piece, nbytes=need), n, piece, need)
+        for n in nodes
+    ]
     control = {n: manifest_latency for n in nodes}
     return DistributionPlan(flows=flows, control_latency=control, streaming=True)
 
@@ -127,6 +157,10 @@ def kraken_plan(
     coordinates every (node, layer) announce — serialized on its CPU by the
     simulator (``SimConfig.coordinator_cost_s``) — so it is both data seeder
     and metadata bottleneck.
+
+    Kraken never touches the registry directly (the origin VM pre-seeds the
+    layers), so this builder takes no ``registry`` argument: sharding the
+    registry cannot help it — exactly the contrast the shard sweep shows.
     """
     rng = random.Random(seed)
     flows = []
@@ -159,6 +193,7 @@ def dadi_plan(
     fanout: int = 4,
     startup_fraction: float = 1.0,
     manifest_latency: float = 0.010,
+    registry: RegistrySpec | ShardResolver | None = None,
 ) -> DistributionPlan:
     """Static tree rooted at a dedicated VM; root also manages the topology.
 
@@ -169,7 +204,8 @@ def dadi_plan(
     ``SimConfig.coordinator_cost_s``.
     """
     need = int(image_bytes * startup_fraction)
-    flows = [Flow(REGISTRY, root, "img", need)]
+    resolver = as_resolver(registry)
+    flows = [Flow(resolver.source_for("img", nbytes=need), root, "img", need)]
     coordinator = {}
     parents = [root]
     i = 0

@@ -1,4 +1,6 @@
 """Discrete-event simulation of FaaSNet provisioning and the paper's baselines."""
+from repro.core.registry import RegistrySpec, ShardResolver
+
 from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
 from .engine import GBPS, FlowSim, NICConfig, SimConfig
 from .multi_tenant import (
@@ -26,6 +28,8 @@ from .traces import (
 from .workload import ReplayConfig, TickStats, TraceReplay
 
 __all__ = [
+    "RegistrySpec",
+    "ShardResolver",
     "SYSTEMS",
     "WaveConfig",
     "provision_wave",

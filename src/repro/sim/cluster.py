@@ -11,8 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core import FunctionTree, RPCCosts
+from repro.core.registry import RegistrySpec, ShardResolver
 from repro.core.topology import (
-    REGISTRY,
     baseline_plan,
     dadi_plan,
     faasnet_plan,
@@ -47,10 +47,19 @@ class WaveConfig:
     registry_out_cap: float = 9.5 * GBPS
     # Registry request throttling for block-granular (on-demand) fetchers.
     registry_qps: float = 1100.0
+    # Sharded registry: ``None`` means one shard with the two caps above
+    # (bit-identical to the pre-sharding simulator); an explicit spec wins
+    # outright — its per-shard egress/qps replace the legacy knobs.
+    registry: RegistrySpec | None = None
     rpc: RPCCosts = field(default_factory=RPCCosts)
     kraken_coord_s: float = 0.070  # origin CPU per (node, layer) announce
     dadi_coord_s: float = 0.160  # DADI root CPU per joining node
     seed: int = 0
+
+    def registry_spec(self) -> RegistrySpec:
+        return RegistrySpec.resolve(
+            self.registry, egress_cap=self.registry_out_cap, qps=self.registry_qps
+        )
 
 
 SYSTEMS = ("faasnet", "baseline", "on_demand", "kraken", "dadi_p2p")
@@ -79,10 +88,11 @@ def provision_wave(
     coord_cost = {"kraken": cfg.kraken_coord_s, "dadi_p2p": cfg.dadi_coord_s}.get(
         system, 0.0
     )
+    spec = cfg.registry_spec()
+    resolver = ShardResolver(spec)  # one resolver per wave: stateful policies
     sim = FlowSim(
         SimConfig(
-            registry_out_cap=cfg.registry_out_cap,
-            registry_qps=cfg.registry_qps,
+            registry=spec,
             per_stream_cap=cfg.per_stream_cap,
             hop_latency=cfg.hop_latency,
             coordinator_cost_s=coord_cost,
@@ -114,12 +124,13 @@ def provision_wave(
             image_bytes=cfg.image_bytes,
             startup_fraction=cfg.startup_fraction,
             manifest_latency=cfg.rpc.manifest_fetch,
+            registry=resolver,
         )
         # warm roots already have the payload: zero-byte flows
         plan = _mark_warm(plan, {f"warm{i}" for i in range(warm_roots)})
         extra = cfg.container_start + cfg.rpc.image_load
     elif system == "baseline":
-        plan = baseline_plan(nodes, image_bytes=cfg.image_bytes)
+        plan = baseline_plan(nodes, image_bytes=cfg.image_bytes, registry=resolver)
         extra = cfg.container_start + cfg.image_bytes / cfg.image_extract_rate
     elif system == "on_demand":
         plan = on_demand_plan(
@@ -127,6 +138,7 @@ def provision_wave(
             image_bytes=cfg.image_bytes,
             startup_fraction=cfg.startup_fraction,
             manifest_latency=cfg.rpc.manifest_fetch,
+            registry=resolver,
         )
         extra = cfg.container_start + cfg.rpc.image_load
     elif system == "kraken":
@@ -144,6 +156,7 @@ def provision_wave(
             image_bytes=cfg.image_bytes,
             root="vm0",
             startup_fraction=cfg.startup_fraction,
+            registry=resolver,
         )
         extra = cfg.container_start + cfg.rpc.image_load
     else:

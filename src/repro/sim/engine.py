@@ -1,8 +1,9 @@
 """Deterministic discrete-event fluid-flow network simulator.
 
 Models a pool of VMs (full-duplex NICs with separate in/out capacity), a
-central registry with bounded egress, and a set of data flows produced by a
-:class:`repro.core.topology.DistributionPlan`.  Used to time provisioning
+sharded registry (N capped-egress, QPS-throttled sources — see
+:class:`repro.core.registry.RegistrySpec`), and a set of data flows produced
+by a :class:`repro.core.topology.DistributionPlan`.  Used to time provisioning
 waves for FaaSNet and the paper's comparison systems, to replay the
 application-level traces (Figures 11-18), and — via ``repro.sim.scale`` —
 to reproduce the paper's §4.2 1000-VM burst at full size.
@@ -53,9 +54,15 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core.topology import REGISTRY, DistributionPlan, Flow
+from repro.core.registry import GBPS, RegistrySpec, is_registry_node, shard_index
+from repro.core.topology import DistributionPlan, Flow
 
-GBPS = 125e6  # 1 Gbit/s in bytes/s
+__all__ = [
+    "GBPS",  # canonical home of the shared bytes/s constant
+    "NICConfig",
+    "SimConfig",
+    "FlowSim",
+]
 
 
 @dataclass
@@ -75,10 +82,20 @@ class SimConfig:
     decompress_rate: float = 2e9  # bytes/s; >> network, so rarely binding
     # Registry request throttling (paper §4.3: "image pulls are throttled at
     # the registry").  Block-granular fetchers issue one range request per
-    # block; the registry serves at most ``registry_qps`` such requests/s,
-    # which caps the aggregate block-mode egress at block_size * qps shared
-    # across the streams currently hitting the registry.
+    # block; each registry shard serves at most ``qps`` such requests/s,
+    # which caps that shard's block-mode egress at block_size * qps shared
+    # across the streams currently hitting it.
     registry_qps: float = float("inf")
+    # Sharded registry.  ``None`` builds a 1-shard spec from the two legacy
+    # knobs above, which keeps every pre-sharding configuration bit-exact;
+    # a multi-shard spec makes each shard an independent capped source.
+    registry: Optional[RegistrySpec] = None
+
+    def registry_spec(self) -> RegistrySpec:
+        """The effective spec (legacy knobs become a 1-shard registry)."""
+        return RegistrySpec.resolve(
+            self.registry, egress_cap=self.registry_out_cap, qps=self.registry_qps
+        )
 
 
 @dataclass(eq=False)
@@ -110,6 +127,7 @@ class FlowSim:
 
     def __init__(self, cfg: SimConfig | None = None, *, record_rates: bool = False) -> None:
         self.cfg = cfg or SimConfig()
+        self.registry = self.cfg.registry_spec()
         self.now = 0.0
         self._flows: list[_FlowState] = []  # index == fid
         self._events: list[tuple[float, int, Callable[[], None]]] = []
@@ -125,8 +143,20 @@ class FlowSim:
         self.events_processed = 0
         self.record_rates = record_rates
         self.rate_log: list[tuple[float, int, float]] = []  # (t, fid, new_rate)
-        self._reg_out_sum = 0.0  # running aggregate registry egress (bytes/s)
+        # Per-shard registry egress accounting: running sums and peaks keyed
+        # by canonical shard id, plus the aggregate (sum across shards) peak.
+        self._reg_out: dict[str, float] = {}
+        self.peak_shard_egress: dict[str, float] = {}
         self.peak_registry_egress = 0.0
+
+    # ------------------------------------------------------------------
+    def _src_key(self, node: str) -> str:
+        """NIC-registry key for a flow source: registry aliases collapse to
+        their canonical shard id so the legacy ``__registry__`` sentinel and
+        shard 0 contend for (and are accounted against) the same source."""
+        if is_registry_node(node):
+            return self.registry.canonical(node)
+        return node
 
     # ------------------------------------------------------------------
     def set_slow_vm(self, vm_id: str, out_cap: float) -> None:
@@ -198,7 +228,7 @@ class FlowSim:
                 coordinator_queues[coord] = release
             st = _FlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
                             start_after=release,
-                            block_mode=plan.streaming and fl.src == REGISTRY)
+                            block_mode=plan.streaming and is_registry_node(fl.src))
             states.append(st)
             # streaming dependency: dst of the parent flow == src of this flow
             by_dst.setdefault(fl.dst, st)
@@ -243,11 +273,12 @@ class FlowSim:
         st.t_start = self.now
         st.t_last = self.now
         f = st.flow
-        self._out.setdefault(f.src, {})[st.fid] = st
+        skey = self._src_key(f.src)
+        self._out.setdefault(skey, {})[st.fid] = st
         self._in.setdefault(f.dst, {})[st.fid] = st
         self.trace.append((self.now, f"start#{st.fid} {f.src}->{f.dst}/{f.piece}"))
         # Counts on both NICs changed: every flow sharing them is dirty.
-        for g in self._out[f.src].values():
+        for g in self._out[skey].values():
             self._pending_dirty[g.fid] = g
         for g in self._in[f.dst].values():
             self._pending_dirty[g.fid] = g
@@ -271,7 +302,7 @@ class FlowSim:
     def _recompute(self, dirty: dict[int, _FlowState]) -> None:
         """Re-rate the dirty closure, parents before streaming children."""
         cfg = self.cfg
-        reg_block_rate = cfg.block_size * cfg.registry_qps  # aggregate bytes/s
+        spec = self.registry
         wl: list[tuple[int, int]] = []
         queued: set[int] = set()
         for f in dirty.values():
@@ -285,9 +316,12 @@ class FlowSim:
             if not f.started or f.done:
                 continue
             src, dst = f.flow.src, f.flow.dst
-            n_out = len(self._out[src])
-            if src == REGISTRY:
-                cap_out = cfg.registry_out_cap
+            from_registry = is_registry_node(src)
+            skey = spec.canonical(src) if from_registry else src
+            n_out = len(self._out[skey])
+            if from_registry:
+                shard = shard_index(skey)
+                cap_out = spec.egress_of(shard)
             else:
                 cap_out = self._slow_out.get(src, cfg.vm_nic.out_cap)
             r = min(
@@ -296,14 +330,15 @@ class FlowSim:
                 cfg.vm_nic.in_cap / len(self._in[dst]),
                 cfg.decompress_rate,
             )
-            if src == REGISTRY and f.block_mode:
-                r = min(r, reg_block_rate / n_out)
+            if from_registry and f.block_mode:
+                # per-shard request throttle shared by the shard's streams
+                r = min(r, cfg.block_size * spec.qps_of(shard) / n_out)
             if f.parent is not None and not f.parent.done:
                 r = min(r, f.parent.rate)
             if r != f.rate:
                 self._settle(f)
-                if src == REGISTRY:
-                    self._reg_out_sum += r - f.rate
+                if from_registry:
+                    self._reg_out[skey] = self._reg_out.get(skey, 0.0) + (r - f.rate)
                 f.rate = r
                 f.epoch += 1
                 if r > 0.0:
@@ -317,8 +352,13 @@ class FlowSim:
                     if c.started and not c.done and c.fid not in queued:
                         heapq.heappush(wl, (c.depth, c.fid))
                         queued.add(c.fid)
-        if self._reg_out_sum > self.peak_registry_egress:
-            self.peak_registry_egress = self._reg_out_sum
+        if self._reg_out:
+            for skey, egress in self._reg_out.items():
+                if egress > self.peak_shard_egress.get(skey, 0.0):
+                    self.peak_shard_egress[skey] = egress
+            total = sum(self._reg_out.values())
+            if total > self.peak_registry_egress:
+                self.peak_registry_egress = total
 
     def _next_completion(self) -> float:
         """Earliest valid completion time (lazily dropping stale heap entries)."""
@@ -337,14 +377,15 @@ class FlowSim:
         f.remaining = 0.0
         f.t_done = self.now
         f.t_last = self.now
-        del self._out[fl.src][f.fid]
+        skey = self._src_key(fl.src)
+        del self._out[skey][f.fid]
         del self._in[fl.dst][f.fid]
-        if fl.src == REGISTRY:
-            self._reg_out_sum -= f.rate
+        if is_registry_node(fl.src):
+            self._reg_out[skey] -= f.rate
         self.events_processed += 1
         self.trace.append((self.now, f"done#{f.fid} {fl.src}->{fl.dst}/{fl.piece}"))
         # Freed shares on both NICs + the lifted parent-cap on children.
-        for g in self._out[fl.src].values():
+        for g in self._out[skey].values():
             self._pending_dirty[g.fid] = g
         for g in self._in[fl.dst].values():
             self._pending_dirty[g.fid] = g

@@ -12,11 +12,15 @@ exactly as in production.
 Scheduler failover (ROADMAP: scheduler-shard metadata sync)
 -----------------------------------------------------------
 At a configurable tick the replay serializes the whole control plane with
-:meth:`FTManager.snapshot`, round-trips it through ``json.dumps`` (proving
-it is wire-serializable, the etcd-style sync the paper describes), discards
-the manager object and continues on :meth:`FTManager.restore`.  Because the
-snapshot captures tree topologies, the free pool in FIFO order, the VM
-registration order and the telemetry counters, the failed-over run emits a
+:meth:`MultiTenantReplay.snapshot` — the :meth:`FTManager.snapshot` plus the
+registry shard map (:class:`~repro.core.registry.RegistrySpec` and the
+:class:`~repro.core.registry.ShardResolver` assignment state) — round-trips
+it through ``json.dumps`` (proving it is wire-serializable, the etcd-style
+sync the paper describes), discards the manager object and continues on
+:meth:`restore_snapshot` (legacy bare-manager snapshots restore with a
+1-shard registry).  Because the snapshot captures tree topologies, the free
+pool in FIFO order, the VM registration order, the telemetry counters and
+the shard map, the failed-over run emits a
 **bit-identical** :class:`TickStats` stream versus an uninterrupted run — pinned by ``tests/test_multi_tenant.py`` and the
 ``scripts/ci.sh`` trace smoke.
 
@@ -38,10 +42,11 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core import FTManager, VMInfo
-from repro.core.topology import REGISTRY, DistributionPlan, Flow
+from repro.core.registry import RegistrySpec, ShardResolver, is_registry_node
+from repro.core.topology import DistributionPlan, Flow
 
 from .cluster import WaveConfig
-from .engine import FlowSim, SimConfig
+from .engine import GBPS, FlowSim, SimConfig
 from .traces import arrivals_for_second
 
 
@@ -78,8 +83,11 @@ class MultiTenantConfig:
     system: str = "faasnet"  # faasnet | baseline | on_demand
     vm_pool_size: int = 2000
     idle_reclaim_s: float = 7 * 60.0
-    registry_out_cap: float = 6.5e9  # region-scale registry (see workload.py)
+    registry_out_cap: float = 52 * GBPS  # region-scale registry (see workload.py)
     registry_qps: float = 700.0
+    # Sharded registry: ``None`` keeps the legacy 1-shard registry built from
+    # the two caps above (bit-identical streams); an explicit spec wins.
+    registry: Optional[RegistrySpec] = None
     wave: WaveConfig = field(default_factory=WaveConfig)
     # Scheduler failover: snapshot/json-round-trip/restore the FTManager at
     # the *start* of this tick (None = never).  The replay must be
@@ -89,6 +97,11 @@ class MultiTenantConfig:
 
     def duration_s(self) -> int:
         return max((len(t.trace) for t in self.tenants), default=0)
+
+    def registry_spec(self) -> RegistrySpec:
+        return RegistrySpec.resolve(
+            self.registry, egress_cap=self.registry_out_cap, qps=self.registry_qps
+        )
 
 
 @dataclass
@@ -110,7 +123,8 @@ class MultiTenantResult:
     system: str
     per_tenant: dict[str, TenantResult]
     timelines: dict[str, list[TickStats]]
-    peak_registry_egress: float  # bytes/s, shared across all tenants
+    peak_registry_egress: float  # bytes/s, aggregate across shards + tenants
+    peak_shard_egress: dict[str, float]  # shard id -> peak egress (bytes/s)
     prov_makespan_s: float  # whole-platform first reservation -> last ready
     total_prov_time_s: float  # sum of all provisioning latencies
     failovers: int
@@ -160,14 +174,18 @@ class MultiTenantReplay:
             raise ValueError(f"duplicate tenant function ids: {fids}")
         self.cfg = cfg
         w = cfg.wave
+        spec = cfg.registry_spec()
         self.sim = FlowSim(
             SimConfig(
-                registry_out_cap=cfg.registry_out_cap,
-                registry_qps=cfg.registry_qps,
+                registry=spec,
                 per_stream_cap=w.per_stream_cap,
                 hop_latency=w.hop_latency,
             )
         )
+        # Shard assignment is scheduler state (it rides the failover snapshot
+        # alongside the FTManager, so a restored scheduler keeps placing
+        # blobs exactly where the failed one would have).
+        self.resolver = ShardResolver(spec)
         self.mgr = FTManager(vm_idle_reclaim_s=cfg.idle_reclaim_s)
         for i in range(cfg.vm_pool_size):
             self.mgr.add_free_vm(VMInfo(f"vm{i}"))
@@ -177,17 +195,51 @@ class MultiTenantReplay:
     # ------------------------------------------------------------------
     # Scheduler failover (the tentpole's mid-wave snapshot/restore)
     # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Wire-serializable control-plane state: trees + registry layout.
+
+        The registry spec and the shard resolver's assignment state are part
+        of the snapshot so a restored scheduler keeps the same shard map.
+        """
+        return {
+            "version": 2,
+            "manager": self.mgr.snapshot(),
+            "registry": self.resolver.snapshot(),
+        }
+
+    def restore_snapshot(self, blob: dict) -> None:
+        """Rebuild the control plane from :meth:`snapshot` output.
+
+        Legacy snapshots (a bare pre-sharding ``FTManager.snapshot()`` dict,
+        no ``manager``/``registry`` envelope) restore with a 1-shard registry
+        built from the config's legacy caps.
+        """
+        if "manager" in blob:
+            mgr_blob = blob["manager"]
+            self.resolver = ShardResolver.restore(blob["registry"])
+        else:  # legacy pre-sharding snapshot: single-shard registry
+            mgr_blob = blob
+            self.resolver = ShardResolver(
+                RegistrySpec.resolve(
+                    None,
+                    egress_cap=self.cfg.registry_out_cap,
+                    qps=self.cfg.registry_qps,
+                )
+            )
+        self.mgr = FTManager.restore(
+            mgr_blob, vm_idle_reclaim_s=self.cfg.idle_reclaim_s
+        )
+
     def _failover(self) -> None:
         """Kill the scheduler: serialize, discard, restore from the wire copy.
 
         The FlowSim (data plane) keeps running — in production the in-flight
         image streams do not care which scheduler shard owns the metadata.
-        Only the control plane (trees, pool, counters) crosses the wire.
+        Only the control plane (trees, pool, counters, shard map) crosses
+        the wire.
         """
-        blob = json.dumps(self.mgr.snapshot(), sort_keys=True)
-        self.mgr = FTManager.restore(
-            json.loads(blob), vm_idle_reclaim_s=self.cfg.idle_reclaim_s
-        )
+        blob = json.dumps(self.snapshot(), sort_keys=True)
+        self.restore_snapshot(json.loads(blob))
         self.failovers += 1
 
     # ------------------------------------------------------------------
@@ -200,12 +252,16 @@ class MultiTenantReplay:
         control = w.rpc.control_plane_total()
         if cfg.system == "faasnet":
             upstream = self.mgr.insert(fid, vm_id, now)
-            src = upstream if upstream is not None else REGISTRY
+            src = (
+                upstream
+                if upstream is not None
+                else self.resolver.source_for(fid, nbytes=payload)
+            )
             streaming = True
         elif cfg.system in ("baseline", "on_demand"):
             if cfg.system == "baseline":
                 payload = w.image_bytes
-            src = REGISTRY
+            src = self.resolver.source_for(fid, nbytes=payload)
             streaming = cfg.system == "on_demand"
             # keep the FT for height reporting + pool-partition parity
             self.mgr.insert(fid, vm_id, now)
@@ -229,7 +285,7 @@ class MultiTenantReplay:
             self.sim.schedule(ready, lambda: self._activate(ts, vm, ready))
 
         states = self.sim.add_plan(plan, t0=now, on_node_done=on_done)
-        if streaming and src != REGISTRY and src in ts.flow_of:
+        if streaming and not is_registry_node(src) and src in ts.flow_of:
             up = ts.flow_of[src]
             if not up.done:  # type: ignore[attr-defined]
                 self.sim.set_parent(states[0], up)  # type: ignore[arg-type]
@@ -382,6 +438,7 @@ class MultiTenantReplay:
             per_tenant=per_tenant,
             timelines={ts.cfg.function_id: ts.timeline for ts in self.tenants},
             peak_registry_egress=self.sim.peak_registry_egress,
+            peak_shard_egress=dict(self.sim.peak_shard_egress),
             prov_makespan_s=(
                 last_ready - first_req if last_ready > float("-inf") else 0.0
             ),

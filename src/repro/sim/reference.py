@@ -11,7 +11,10 @@ engine (:class:`repro.sim.engine.FlowSim`) is differential-tested against
 Both engines share :class:`~repro.sim.engine.SimConfig` and expose the same
 public API (``add_plan`` / ``set_parent`` / ``run`` / ``completion_times``)
 plus an optional per-flow rate log (``record_rates=True``) used by the
-equivalence tests.
+equivalence tests, and both account per-registry-shard egress
+(``peak_shard_egress`` / ``peak_registry_egress``) — here recomputed from
+scratch every event, making this the oracle for the incremental engine's
+delta-maintained per-shard sums (``tests/test_registry.py``).
 """
 from __future__ import annotations
 
@@ -20,7 +23,8 @@ import math
 from dataclasses import dataclass
 from typing import Callable, Optional
 
-from repro.core.topology import REGISTRY, DistributionPlan, Flow
+from repro.core.registry import is_registry_node, shard_index
+from repro.core.topology import DistributionPlan, Flow
 
 from .engine import SimConfig
 
@@ -48,6 +52,7 @@ class ReferenceFlowSim:
 
     def __init__(self, cfg: SimConfig | None = None, *, record_rates: bool = False) -> None:
         self.cfg = cfg or SimConfig()
+        self.registry = self.cfg.registry_spec()
         self.now = 0.0
         self._flows: list[_RefFlowState] = []
         self._events: list[tuple[float, int, Callable[[], None]]] = []
@@ -56,6 +61,10 @@ class ReferenceFlowSim:
         self.trace: list[tuple[float, str]] = []  # (time, event) log
         self.record_rates = record_rates
         self.rate_log: list[tuple[float, int, float]] = []  # (t, fid, new_rate)
+        # Per-shard egress telemetry, recomputed from scratch every event —
+        # the oracle for the incremental engine's per-shard accounting.
+        self.peak_shard_egress: dict[str, float] = {}
+        self.peak_registry_egress = 0.0
 
     # ------------------------------------------------------------------
     def set_slow_vm(self, vm_id: str, out_cap: float) -> None:
@@ -96,7 +105,7 @@ class ReferenceFlowSim:
                 coordinator_queues[coord] = release
             st = _RefFlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
                                start_after=release,
-                               block_mode=plan.streaming and fl.src == REGISTRY)
+                               block_mode=plan.streaming and is_registry_node(fl.src))
             states.append(st)
             # streaming dependency: dst of the parent flow == src of this flow
             by_dst.setdefault(fl.dst, st)
@@ -149,18 +158,26 @@ class ReferenceFlowSim:
     # ------------------------------------------------------------------
     # Rate computation (called after every event)
     # ------------------------------------------------------------------
+    def _src_key(self, node: str) -> str:
+        """Canonical source key: registry aliases collapse to their shard."""
+        if is_registry_node(node):
+            return self.registry.canonical(node)
+        return node
+
     def _recompute_rates(self) -> None:
         cfg = self.cfg
+        spec = self.registry
         out_count: dict[str, int] = {}
         in_count: dict[str, int] = {}
         active = [f for f in self._flows if f.started and not f.done]
         for f in active:
-            out_count[f.flow.src] = out_count.get(f.flow.src, 0) + 1
+            skey = self._src_key(f.flow.src)
+            out_count[skey] = out_count.get(skey, 0) + 1
             in_count[f.flow.dst] = in_count.get(f.flow.dst, 0) + 1
 
         def out_cap(node: str) -> float:
-            if node == REGISTRY:
-                return cfg.registry_out_cap
+            if is_registry_node(node):
+                return spec.egress_of(shard_index(spec.canonical(node)))
             return self._slow_out.get(node, cfg.vm_nic.out_cap)
 
         # topological order: parents before children (tree depth is small)
@@ -171,22 +188,34 @@ class ReferenceFlowSim:
                 p = p.parent
             return d
 
-        reg_block_rate = cfg.block_size * cfg.registry_qps  # aggregate bytes/s
+        reg_out: dict[str, float] = {}
         for f in sorted(active, key=depth):
+            skey = self._src_key(f.flow.src)
             r = min(
                 cfg.per_stream_cap,
-                out_cap(f.flow.src) / out_count[f.flow.src],
+                out_cap(f.flow.src) / out_count[skey],
                 cfg.vm_nic.in_cap / in_count[f.flow.dst],
                 cfg.decompress_rate,
             )
-            if f.flow.src == REGISTRY and f.block_mode:
-                r = min(r, reg_block_rate / out_count[REGISTRY])
+            if f.block_mode and is_registry_node(f.flow.src):
+                # per-shard request throttle shared by the shard's streams
+                shard = shard_index(skey)
+                r = min(r, cfg.block_size * spec.qps_of(shard) / out_count[skey])
             if f.parent is not None and not f.parent.done:
                 r = min(r, f.parent.rate)
             if r != f.rate:
                 f.rate = r
                 if self.record_rates:
                     self.rate_log.append((self.now, f.fid, r))
+            if is_registry_node(f.flow.src):
+                reg_out[skey] = reg_out.get(skey, 0.0) + f.rate
+        for skey, egress in reg_out.items():
+            if egress > self.peak_shard_egress.get(skey, 0.0):
+                self.peak_shard_egress[skey] = egress
+        if reg_out:
+            total = sum(reg_out.values())
+            if total > self.peak_registry_egress:
+                self.peak_registry_egress = total
 
     # ------------------------------------------------------------------
     def run(self, until: float = math.inf) -> float:

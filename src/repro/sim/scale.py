@@ -27,6 +27,7 @@ import time
 from dataclasses import dataclass, field
 
 from repro.core import FTManager, VMInfo
+from repro.core.registry import RegistrySpec, ShardResolver
 from repro.core.topology import faasnet_plan
 
 from .cluster import WaveConfig
@@ -77,6 +78,7 @@ def multi_tenant_config(
     system: str = "faasnet",
     failover_at: int | None = 12 * 60,
     check_partition: bool = False,
+    registry: "RegistrySpec | None" = None,
 ) -> "MultiTenantConfig":
     """The trace-driven companion of :func:`mega_burst_config` (§4.2 waves).
 
@@ -129,6 +131,7 @@ def multi_tenant_config(
         idle_reclaim_s=7 * 60.0,
         failover_at=failover_at,
         check_partition=check_partition,
+        registry=registry,
     )
 
 
@@ -142,7 +145,7 @@ class ScaleResult:
     events: int  # engine events processed
     wall_s: float  # wall-clock seconds inside FlowSim.run
     events_per_s: float
-    peak_registry_egress: float  # bytes/s
+    peak_registry_egress: float  # bytes/s, aggregate across shards
     reparents: int  # on_reparent notifications during churn
     tree_stats: dict[str, dict[str, int]]
     trace: list  # the engine's (time, event) log — golden-test fodder
@@ -150,6 +153,8 @@ class ScaleResult:
     build_s: float = 0.0  # stand up VM pool + all FunctionTrees
     churn_s: float = 0.0  # apply_churn total
     churn_op_s: float = 0.0  # mean latency of one delete+reinsert churn op
+    # Per-shard peak egress (shard id -> bytes/s); one entry per shard hit.
+    peak_shard_egress: dict[str, float] = field(default_factory=dict)
 
 
 def _function_ids(cfg: ScaleConfig) -> list[str]:
@@ -224,10 +229,13 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
     reparents = apply_churn(mgr, members, cfg)
     churn_s = time.perf_counter() - t_churn0
 
+    spec = w.registry_spec()
+    # ONE resolver across all per-function plans: stateful placement policies
+    # (least_loaded / replicated) see the whole burst's assignments.
+    resolver = ShardResolver(spec)
     sim = FlowSim(
         SimConfig(
-            registry_out_cap=w.registry_out_cap,
-            registry_qps=w.registry_qps,
+            registry=spec,
             per_stream_cap=w.per_stream_cap,
             hop_latency=w.hop_latency,
         )
@@ -242,6 +250,7 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
             startup_fraction=w.startup_fraction,
             manifest_latency=w.rpc.manifest_fetch,
             piece=fid,
+            registry=resolver,
         )
         n_flows += len(plan.flows)
         sim.add_plan(
@@ -273,6 +282,7 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
         wall_s=wall,
         events_per_s=sim.events_processed / wall if wall > 0 else float("inf"),
         peak_registry_egress=sim.peak_registry_egress,
+        peak_shard_egress=dict(sim.peak_shard_egress),
         reparents=reparents,
         tree_stats=mgr.tree_stats(),
         trace=sim.trace,

@@ -13,8 +13,12 @@ flows evolve in continuous time inside the FlowSim.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.registry import RegistrySpec
 
 from .cluster import WaveConfig
+from .engine import GBPS
 from .multi_tenant import (
     MultiTenantConfig,
     MultiTenantReplay,
@@ -35,8 +39,10 @@ class ReplayConfig:
     # The trace tests run against the region-scale production registry, not
     # the 128-VM devcluster one the microbenchmarks were calibrated against
     # (paper §4.1 vs §4.2 use different deployments).
-    registry_out_cap: float = 6.5e9  # bytes/s (~52 Gbps region registry)
+    registry_out_cap: float = 52 * GBPS  # bytes/s (52 Gbps region registry)
     registry_qps: float = 700.0
+    # Sharded registry (None = legacy 1 shard built from the caps above).
+    registry: Optional[RegistrySpec] = None
     max_reserve_per_tick: int = 64  # scheduler VM-reservation rate limit
     # Scale-out target: reserve until (instances + provisioning) reaches
     # ~target_factor × observed RPS (the paper's scheduler grows the IoT
@@ -79,6 +85,7 @@ class TraceReplay:
                 idle_reclaim_s=cfg.idle_reclaim_s,
                 registry_out_cap=cfg.registry_out_cap,
                 registry_qps=cfg.registry_qps,
+                registry=cfg.registry,
                 wave=cfg.wave,
             )
         )

@@ -1,0 +1,458 @@
+"""Sharded registry subsystem (ISSUE 4): spec/resolver semantics, per-shard
+engine accounting, and the bit-identical single-shard regression.
+
+Four safety nets:
+
+  * *golden single-shard regression* — the default ``RegistrySpec(shards=1)``
+    reproduces the pre-sharding simulator **exactly**: provisioning-wave
+    latencies, the scale scenario's makespan, peak egress and full event-log
+    hash, and the single-tenant TickStats stream hashes were all captured on
+    the commit before the refactor and are pinned here verbatim;
+  * *differential per-shard accounting* — the incremental engine matches the
+    full-recompute oracle (rates, times, per-shard peaks) on faasnet /
+    baseline / kraken plans at 1, 2 and 4 shards;
+  * *property* — per-shard egress peaks always sum to >= the aggregate peak
+    (shards peak at different times, so the sum over-counts, never under);
+  * *failover* — the shard map (spec + resolver state) rides the scheduler
+    snapshot; legacy bare-manager snapshots restore as a 1-shard registry.
+"""
+import hashlib
+import json
+import statistics as st
+
+import pytest
+
+from repro.core import FunctionTree
+from repro.core.registry import (
+    GBPS,
+    PLACEMENT_POLICIES,
+    REGISTRY,
+    RegistrySpec,
+    ShardResolver,
+    as_resolver,
+    is_registry_node,
+    shard_index,
+)
+from repro.core.topology import (
+    DistributionPlan,
+    Flow,
+    baseline_plan,
+    faasnet_plan,
+    kraken_plan,
+)
+from repro.sim import (
+    FlowSim,
+    MultiTenantConfig,
+    MultiTenantReplay,
+    ReferenceFlowSim,
+    ReplayConfig,
+    SimConfig,
+    TenantConfig,
+    TraceReplay,
+    WaveConfig,
+    constant_trace,
+    iot_trace,
+    provision_wave,
+    run_multi_tenant,
+    synthetic_gaming_trace,
+)
+from repro.sim.scale import ScaleConfig, run_scale
+
+from test_scale import _assert_equivalent, _close
+
+MB = 1e6
+
+
+# ----------------------------------------------------------------------
+# RegistrySpec / node-id semantics
+# ----------------------------------------------------------------------
+def test_spec_validation():
+    with pytest.raises(ValueError, match=">= 1 shard"):
+        RegistrySpec(shards=0)
+    with pytest.raises(ValueError, match="placement policy"):
+        RegistrySpec(policy="random")
+    with pytest.raises(ValueError, match="egress_caps"):
+        RegistrySpec(shards=2, egress_caps=(1e9,))
+    with pytest.raises(ValueError, match="qps_caps"):
+        RegistrySpec(shards=3, qps_caps=(1.0, 2.0))
+
+
+def test_single_shard_is_the_legacy_sentinel():
+    """1-shard naming == pre-sharding naming: the bit-compat cornerstone."""
+    spec = RegistrySpec(shards=1)
+    assert spec.shard_id(0) == REGISTRY
+    assert spec.shard_ids() == [REGISTRY]
+    assert spec.canonical(REGISTRY) == REGISTRY
+
+
+def test_multi_shard_ids_and_alias():
+    spec = RegistrySpec(shards=4)
+    ids = spec.shard_ids()
+    assert len(set(ids)) == 4
+    for i, sid in enumerate(ids):
+        assert is_registry_node(sid)
+        assert shard_index(sid) == i
+        assert spec.canonical(sid) == sid
+    # the legacy sentinel stays a valid alias, canonicalized to shard 0
+    assert is_registry_node(REGISTRY)
+    assert spec.canonical(REGISTRY) == spec.shard_id(0)
+    assert not is_registry_node("vm17")
+    with pytest.raises(ValueError):
+        shard_index("vm17")
+    with pytest.raises(IndexError):
+        spec.shard_id(4)
+
+
+def test_shard_count_mismatch_raises_not_clamps():
+    """A plan built against a bigger registry than the engine's spec is a
+    config bug: it must raise, not silently run at one shard's capacity."""
+    spec1 = RegistrySpec(shards=1)
+    assert spec1.canonical("__registry_shard0__") == REGISTRY  # valid alias
+    with pytest.raises(ValueError, match="does not exist"):
+        spec1.canonical("__registry_shard1__")
+    plan = baseline_plan(["a", "b"], image_bytes=1_000_000,
+                         registry=RegistrySpec(shards=2, policy="replicated"))
+    sim = FlowSim(SimConfig())  # default 1-shard engine: mismatched
+    sim.add_plan(plan)
+    with pytest.raises(ValueError, match="does not exist"):
+        sim.run()
+
+
+def test_registry_spec_resolve_legacy_knobs():
+    spec = RegistrySpec(shards=4)
+    assert RegistrySpec.resolve(spec, egress_cap=1.0, qps=2.0) is spec
+    legacy = RegistrySpec.resolve(None, egress_cap=3e9, qps=500.0)
+    assert legacy == RegistrySpec(shards=1, egress_cap=3e9, qps=500.0)
+
+
+def test_heterogeneous_per_shard_caps():
+    spec = RegistrySpec(shards=2, egress_cap=1e9, egress_caps=(5e8, 1e9),
+                        qps=100.0, qps_caps=(100.0, 700.0))
+    assert spec.egress_of(0) == 5e8 and spec.egress_of(1) == 1e9
+    assert spec.qps_of(1) == 700.0
+    assert spec.aggregate_egress_cap() == 1.5e9
+    # engine side: one egress-bound flow per shard; shard 1 is 2x faster
+    cfg = SimConfig(registry=spec)
+    cfg.vm_nic.in_cap = float("inf")  # isolate the per-shard egress caps
+    sim = FlowSim(cfg)
+    done = {}
+    sim.add_plan(
+        DistributionPlan(
+            flows=[Flow(spec.shard_id(0), "a", "img", 1_000_000_000),
+                   Flow(spec.shard_id(1), "b", "img", 1_000_000_000)],
+            streaming=False,
+        ),
+        on_node_done=lambda vm, t: done.setdefault(vm, t),
+    )
+    sim.run()
+    assert _close(done["a"], 2.0) and _close(done["b"], 1.0), done
+
+
+# ----------------------------------------------------------------------
+# ShardResolver policies + wire snapshot
+# ----------------------------------------------------------------------
+def test_hash_by_function_is_stable_and_spreads():
+    spec = RegistrySpec(shards=4, policy="hash_by_function")
+    a, b = ShardResolver(spec), ShardResolver(spec)
+    pieces = [f"fn{i}" for i in range(64)]
+    assert [a.shard_for(p) for p in pieces] == [b.shard_for(p) for p in pieces]
+    assert {a.shard_for(p) for p in pieces} == {0, 1, 2, 3}  # all shards hit
+
+
+def test_least_loaded_balances_bytes():
+    r = ShardResolver(RegistrySpec(shards=3, policy="least_loaded"))
+    for i in range(30):
+        r.source_for(f"fn{i}", nbytes=100 + i)  # slightly uneven blobs
+    assert max(r.loads) - min(r.loads) <= max(100 + i for i in range(30))
+
+
+def test_replicated_round_robins():
+    spec = RegistrySpec(shards=3, policy="replicated")
+    r = ShardResolver(spec)
+    got = [r.source_for("img") for _ in range(6)]
+    assert got == [spec.shard_id(i % 3) for i in range(6)]
+
+
+def test_resolver_snapshot_roundtrip_continues_identically():
+    for policy in PLACEMENT_POLICIES:
+        spec = RegistrySpec(shards=3, policy=policy, qps=float("inf"))
+        a = ShardResolver(spec)
+        for i in range(7):
+            a.source_for(f"fn{i}", nbytes=1000 * i)
+        # json round-trip (inf qps must survive the wire)
+        b = ShardResolver.restore(json.loads(json.dumps(a.snapshot())))
+        assert b.spec == spec
+        assert b.loads == a.loads
+        tail_a = [a.source_for(f"t{i}", nbytes=10) for i in range(9)]
+        tail_b = [b.source_for(f"t{i}", nbytes=10) for i in range(9)]
+        assert tail_a == tail_b, policy
+
+
+def test_as_resolver_coercion():
+    assert as_resolver(None).spec == RegistrySpec()
+    spec = RegistrySpec(shards=2)
+    assert as_resolver(spec).spec is spec
+    r = ShardResolver(spec)
+    assert as_resolver(r) is r
+
+
+# ----------------------------------------------------------------------
+# Golden single-shard regression (captured on the pre-sharding commit)
+# ----------------------------------------------------------------------
+def test_golden_provision_wave_unchanged():
+    """Default 1-shard waves reproduce the pre-refactor latencies exactly."""
+    golden = {
+        "faasnet": 7.0702504159999995,
+        "baseline": 35.409666666666666,
+        "on_demand": 8.931815696022728,
+    }
+    for system, want in golden.items():
+        got = st.mean(provision_wave(system, 32, WaveConfig()).values())
+        assert got == want, (system, got, want)
+
+
+def test_golden_scale_scenario_unchanged():
+    """Makespan, peak egress AND the full event-log hash are bit-identical."""
+    res = run_scale(ScaleConfig(n_vms=32, n_functions=4,
+                                containers_per_function=8, churn_ops=5, seed=3))
+    assert res.makespan == 4.475582912
+    assert res.peak_registry_egress == 120000000.0
+    # 1-shard per-shard telemetry reduces to the legacy aggregate
+    assert res.peak_shard_egress == {REGISTRY: 120000000.0}
+    h = hashlib.sha256(
+        "\n".join(f"{t!r} {e}" for t, e in res.trace).encode()
+    ).hexdigest()
+    assert h == "bb5965a1fa885edd0aaf968dfec9bad59941edf5c13a367d869ed2eea7954c82"
+
+
+def test_golden_tickstats_streams_unchanged():
+    """Single-tenant replays emit the pre-refactor TickStats bit-for-bit."""
+    golden = {
+        "faasnet": "b5f8018fe683476756c6b7734b944421bee84190a2bae310e13872268a6c04c2",
+        "baseline": "e720b3a4765553aba8cd860d2fe3e82d6caf16d90c44a05253212a8ab9f670d0",
+    }
+    trace = iot_trace(scale=1 / 3)[: 11 * 60]
+    for system, want in golden.items():
+        r = TraceReplay(
+            ReplayConfig(system=system, idle_reclaim_s=120, vm_pool_size=120)
+        )
+        tl = r.run(trace)
+        h = hashlib.sha256("\n".join(repr(ts) for ts in tl).encode()).hexdigest()
+        assert h == want, system
+    assert r.sim.peak_registry_egress == sum(r.sim.peak_shard_egress.values())
+
+
+def test_legacy_rate_literals_use_gbps_constant():
+    """The 6.5e9 byte-rate literals are now 52 * GBPS — same float exactly."""
+    assert ReplayConfig().registry_out_cap == 52 * GBPS == 6.5e9
+    assert MultiTenantConfig().registry_out_cap == 52 * GBPS == 6.5e9
+
+
+# ----------------------------------------------------------------------
+# Differential per-shard accounting: incremental engine vs the oracle
+# ----------------------------------------------------------------------
+def _spec(shards: int, policy: str = "replicated") -> RegistrySpec:
+    return RegistrySpec(shards=shards, egress_cap=2 * GBPS, qps=1100.0,
+                        policy=policy)
+
+
+def _simcfg(spec: RegistrySpec) -> SimConfig:
+    return SimConfig(registry=spec, per_stream_cap=30 * MB, hop_latency=0.2)
+
+
+def _assert_peaks_equivalent(plan, cfg: SimConfig) -> None:
+    """Both engines agree on per-shard and aggregate peak egress."""
+    peaks = []
+    for cls in (FlowSim, ReferenceFlowSim):
+        sim = cls(cfg)
+        sim.add_plan(plan)
+        sim.run()
+        peaks.append((sim.peak_registry_egress, dict(sim.peak_shard_egress)))
+    (inc_total, inc_shards), (ref_total, ref_shards) = peaks
+    assert _close(inc_total, ref_total), (inc_total, ref_total)
+    assert inc_shards.keys() == ref_shards.keys()
+    for k in inc_shards:
+        assert _close(inc_shards[k], ref_shards[k]), (k, inc_shards, ref_shards)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_differential_baseline_star(shards):
+    plan = baseline_plan([f"vm{i}" for i in range(16)],
+                         image_bytes=int(100 * MB),
+                         registry=ShardResolver(_spec(shards)))
+    _assert_equivalent(plan, _simcfg(_spec(shards)))
+    _assert_peaks_equivalent(plan, _simcfg(_spec(shards)))
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_differential_faasnet_forest(shards):
+    """Three FTs whose roots hash to different shards, one shared sim."""
+    resolver = ShardResolver(_spec(shards, policy="hash_by_function"))
+    flows, control = [], {}
+    for t in range(3):
+        ft = FunctionTree(f"fn{t}")
+        for i in range(7):
+            ft.insert(f"t{t}vm{i}")
+        p = faasnet_plan(ft, image_bytes=int(60 * MB), startup_fraction=0.25,
+                         piece=f"fn{t}", registry=resolver)
+        flows += p.flows
+        control.update(p.control_latency)
+    plan = DistributionPlan(flows=flows, control_latency=control, streaming=True)
+    _assert_equivalent(plan, _simcfg(_spec(shards)))
+    _assert_peaks_equivalent(plan, _simcfg(_spec(shards)))
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_differential_kraken_mesh_untouched_by_shards(shards):
+    """Kraken never hits the registry: sharding must not move it at all."""
+    plan = kraken_plan([f"vm{i}" for i in range(10)],
+                       layer_bytes=[int(8 * MB)] * 3, origin="origin", seed=5)
+    cfg = _simcfg(_spec(shards))
+    cfg.coordinator_cost_s = 0.070
+    _assert_equivalent(plan, cfg)
+    sim = FlowSim(cfg)
+    sim.add_plan(plan)
+    sim.run()
+    assert sim.peak_registry_egress == 0.0
+    assert sim.peak_shard_egress == {}
+
+
+def test_registry_alias_contends_with_shard0():
+    """Legacy ``__registry__`` flows share shard 0's egress, not a free NIC."""
+    spec = RegistrySpec(shards=2, egress_cap=10 * MB)
+    sim = FlowSim(SimConfig(registry=spec))
+    done = {}
+    sim.add_plan(
+        DistributionPlan(
+            flows=[Flow(REGISTRY, "a", "img", 10_000_000),
+                   Flow(spec.shard_id(0), "b", "img", 10_000_000)],
+            streaming=False,
+        ),
+        on_node_done=lambda vm, t: done.setdefault(vm, t),
+    )
+    sim.run()
+    # both flows split shard 0's 10 MB/s: 2 s each, not 1 s
+    assert _close(done["a"], 2.0) and _close(done["b"], 2.0), done
+    assert set(sim.peak_shard_egress) == {spec.shard_id(0)}
+
+
+# ----------------------------------------------------------------------
+# Property: per-shard peaks sum to >= the aggregate peak
+# ----------------------------------------------------------------------
+def test_per_shard_peaks_sum_geq_aggregate_peak():
+    """Shards peak at different instants, so the sum of per-shard peaks can
+    only over-count the aggregate (simultaneous) peak, never under-count."""
+    import random
+
+    for seed in range(6):
+        rng = random.Random(seed)
+        shards = rng.choice([1, 2, 3, 4])
+        policy = rng.choice(list(PLACEMENT_POLICIES))
+        resolver = ShardResolver(_spec(shards, policy=policy))
+        nodes = [f"vm{i}" for i in range(12)]
+        flows = []
+        for i, n in enumerate(nodes):
+            if i == 0 or rng.random() < 0.4:
+                src = resolver.source_for(f"fn{i % 3}",
+                                          nbytes=rng.randrange(1, 40) * 10**6)
+            else:
+                src = nodes[rng.randrange(i)]
+            flows.append(Flow(src, n, f"fn{i % 3}",
+                              rng.randrange(1_000_000, 40_000_000)))
+        plan = DistributionPlan(
+            flows=flows,
+            control_latency={n: rng.random() * 0.05 for n in nodes},
+            streaming=bool(seed % 2),
+        )
+        sim = FlowSim(_simcfg(_spec(shards)))
+        sim.add_plan(plan)
+        sim.run()
+        total = sum(sim.peak_shard_egress.values())
+        assert total >= sim.peak_registry_egress * (1 - 1e-12), (
+            seed, sim.peak_shard_egress, sim.peak_registry_egress
+        )
+
+
+# ----------------------------------------------------------------------
+# Sweep shape: the paper's bottleneck-removal claim in miniature
+# ----------------------------------------------------------------------
+def test_sharding_speeds_up_baseline_not_faasnet():
+    def makespan(system, shards):
+        cfg = WaveConfig(
+            per_stream_cap=float("inf"),
+            registry=RegistrySpec(shards=shards, egress_cap=9.5 * GBPS,
+                                  qps=1100.0, policy="replicated"),
+        )
+        return max(provision_wave(system, 64, cfg).values())
+
+    assert makespan("baseline", 1) > 1.9 * makespan("baseline", 4)
+    f1, f4 = makespan("faasnet", 1), makespan("faasnet", 4)
+    assert abs(f4 - f1) / f1 < 0.05, (f1, f4)
+
+
+# ----------------------------------------------------------------------
+# Failover: the shard map rides the scheduler snapshot
+# ----------------------------------------------------------------------
+def _mt_cfg(*, registry, system="faasnet", failover_at=None,
+            minutes=3) -> MultiTenantConfig:
+    dur = minutes * 60
+    return MultiTenantConfig(
+        tenants=[
+            TenantConfig("gaming", synthetic_gaming_trace()[600 : 600 + dur],
+                         seed=1),
+            TenantConfig("steady", constant_trace(duration_s=dur), seed=2),
+        ],
+        system=system,
+        vm_pool_size=150,
+        idle_reclaim_s=90.0,
+        failover_at=failover_at,
+        registry=registry,
+    )
+
+
+@pytest.mark.parametrize("system", ["faasnet", "baseline"])
+def test_sharded_failover_parity(system):
+    """Failover with a stateful shard policy must not move one TickStats:
+    the resolver's round-robin cursor/loads cross the wire in the snapshot.
+    faasnet consults the resolver only for tree roots; baseline consults it
+    on *every* provision, so the cursor position genuinely matters there."""
+    spec = RegistrySpec(shards=3, egress_cap=2 * GBPS, qps=700.0,
+                        policy="replicated")
+    broken = run_multi_tenant(
+        _mt_cfg(registry=spec, system=system, failover_at=70)
+    )
+    smooth = run_multi_tenant(
+        _mt_cfg(registry=spec, system=system, failover_at=None)
+    )
+    assert broken.failovers == 1
+    assert broken.timelines == smooth.timelines
+    assert broken.per_tenant == smooth.per_tenant
+    assert broken.peak_shard_egress == smooth.peak_shard_egress
+    if system == "baseline":
+        # every provision round-robins: all three shards really saw traffic
+        assert len(broken.peak_shard_egress) == 3
+    else:
+        assert len(broken.peak_shard_egress) >= 1  # roots only — by design
+
+
+def test_legacy_snapshot_restores_as_single_shard():
+    """A pre-sharding snapshot (bare FTManager dict) restores with 1 shard."""
+    replay = MultiTenantReplay(_mt_cfg(registry=None))
+    legacy_blob = json.loads(json.dumps(replay.mgr.snapshot(), sort_keys=True))
+    assert "manager" not in legacy_blob  # genuinely the old wire format
+    replay.resolver = ShardResolver(RegistrySpec(shards=4))  # clobber
+    replay.restore_snapshot(legacy_blob)
+    assert replay.resolver.spec.shards == 1
+    assert replay.resolver.spec.egress_cap == replay.cfg.registry_out_cap
+    assert replay.resolver.spec.qps == replay.cfg.registry_qps
+
+
+def test_replay_snapshot_roundtrip_carries_spec():
+    spec = RegistrySpec(shards=2, egress_cap=3 * GBPS, policy="least_loaded")
+    replay = MultiTenantReplay(_mt_cfg(registry=spec))
+    replay.resolver.source_for("gaming", nbytes=12345)
+    blob = json.loads(json.dumps(replay.snapshot(), sort_keys=True))
+    fresh = MultiTenantReplay(_mt_cfg(registry=spec))
+    fresh.restore_snapshot(blob)
+    assert fresh.resolver.spec == spec
+    assert fresh.resolver.loads == replay.resolver.loads
