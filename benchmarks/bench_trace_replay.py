@@ -41,6 +41,8 @@ def _run(args, *, system: str, failover_at):
         system=system,
         failover_at=failover_at,
         check_partition=not args.skip_checks,
+        placement=args.placement,
+        reclaim=args.reclaim,
     )
     t0 = time.perf_counter()
     res = MultiTenantReplay(cfg).run()
@@ -55,6 +57,21 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--failover-at", type=int, default=12 * 60)
+    from repro.sim import PLACEMENTS, RECLAIM_POLICIES
+
+    ap.add_argument(
+        "--placement",
+        choices=PLACEMENTS,
+        default="shared",
+        help="shared = memory-aware cross-tenant pool (default); "
+        "exclusive = legacy one-VM-one-tenant leasing",
+    )
+    ap.add_argument(
+        "--reclaim",
+        choices=RECLAIM_POLICIES,
+        default="fixed",
+        help="idle-instance reclaim policy",
+    )
     ap.add_argument("--quick", action="store_true", help="3 tenants / 300 VMs / 8 min")
     ap.add_argument(
         "--skip-checks",
@@ -82,6 +99,10 @@ def main() -> None:
         "trace_scale": args.scale,
         "seed": args.seed,
         "failover_at_s": args.failover_at,
+        "placement": args.placement,
+        "reclaim": args.reclaim,
+        "vm_hours": res.vm_hours(),
+        "peak_nic_utilization": res.peak_nic_utilization,
         "failovers": res.failovers,
         "wall_s": wall,
         "baseline_wall_s": base_wall,

@@ -15,6 +15,15 @@ capacity)::
 
     PYTHONPATH=src python examples/trace_replay.py \
         --registry-shards 4 --shard-policy replicated
+
+Multi-tenant mode shares the VM pool across tenants by default (memory-aware
+co-location, paper §3.1); compare against the legacy exclusive leasing or
+the predictive reclaim policy with::
+
+    PYTHONPATH=src python examples/trace_replay.py --multi \
+        --placement exclusive
+    PYTHONPATH=src python examples/trace_replay.py --multi \
+        --reclaim histogram
 """
 import argparse
 import sys
@@ -24,7 +33,14 @@ sys.path.insert(0, "src")
 import statistics as st
 
 from repro.core.registry import PLACEMENT_POLICIES
-from repro.sim import RegistrySpec, ReplayConfig, TraceReplay, iot_trace
+from repro.sim import (
+    PLACEMENTS,
+    RECLAIM_POLICIES,
+    RegistrySpec,
+    ReplayConfig,
+    TraceReplay,
+    iot_trace,
+)
 
 
 def _registry_spec(args, base) -> "RegistrySpec | None":
@@ -81,12 +97,15 @@ def multi_tenant(args) -> None:
             system=system,
             failover_at=args.minutes * 30,  # mid-run scheduler failover
             registry=spec,
+            placement=args.placement,
+            reclaim=args.reclaim,
         )
         results[system] = MultiTenantReplay(cfg).run()
     res = results["faasnet"]
     shards = spec.shards if spec is not None else 1
     print(f"{args.tenants} tenants sharing {args.pool} VMs + a "
-          f"{shards}-shard registry, "
+          f"{shards}-shard registry ({args.placement} placement, "
+          f"{args.reclaim} reclaim), "
           f"{args.minutes} min, scheduler failover at t={args.minutes * 30}s "
           f"(failovers={res.failovers})")
     print(f"{'tenant':12s} {'requests':>8s} {'p99 resp':>9s} {'p99 prov':>9s} "
@@ -99,6 +118,9 @@ def multi_tenant(args) -> None:
     print(f"total provisioning time: faasnet {res.total_prov_time_s:.0f}s vs "
           f"baseline {base_prov:.0f}s "
           f"-> {(1 - ratio) * 100:.1f}% less (paper: 75.2%)")
+    print(f"pool footprint: {res.vm_hours():.1f} VM-hours, "
+          f"{res.cold_starts} cold starts, peak NIC utilization "
+          f"{res.peak_nic_utilization:.2f}")
 
 
 def main() -> None:
@@ -117,6 +139,13 @@ def main() -> None:
     ap.add_argument("--shard-policy", default="hash_by_function",
                     choices=PLACEMENT_POLICIES,
                     help="blob placement across shards")
+    ap.add_argument("--placement", default="shared",
+                    choices=PLACEMENTS,
+                    help="--multi: shared = memory-aware co-location "
+                         "(default); exclusive = legacy per-tenant leasing")
+    ap.add_argument("--reclaim", default="fixed",
+                    choices=RECLAIM_POLICIES,
+                    help="--multi: idle-instance reclaim policy")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.multi:

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Print the headline numbers from every BENCH_*.json in one table.
+
+Consolidates the four benchmark artifacts the repo produces —
+
+  * ``BENCH_scale.json``     (benchmarks/bench_scale_1000.py: §4.2 burst)
+  * ``BENCH_trace.json``     (benchmarks/bench_trace_replay.py: §4.2 traces)
+  * ``BENCH_registry.json``  (benchmarks/bench_registry_sweep.py: §4.3)
+  * ``BENCH_placement.json`` (benchmarks/bench_placement.py: §3.1/§5 pool)
+
+— into one terminal summary, so "where do we stand vs the paper" is a
+single command.  Missing files are reported and skipped, never fatal.
+
+Usage::
+
+    python scripts/bench_summary.py            # reads ./BENCH_*.json
+    python scripts/bench_summary.py --dir path/to/artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def _load(root: Path, name: str) -> dict | None:
+    p = root / name
+    if not p.exists():
+        print(f"  [missing] {name} — run its benchmark to produce it")
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def summarize_scale(d: dict) -> None:
+    print(
+        f"  {d['n_vms']} VMs x {d['n_functions']} fns x "
+        f"{d['containers_per_function']}/fn: fetch makespan "
+        f"{d['fetch_makespan_s']:.1f} s (paper §4.2: {d['paper_reference_s']} s), "
+        f"{d['events_per_s']:,.0f} events/s, FT build {d['ft_build_s']*1e3:.0f} ms"
+    )
+    mega = d.get("mega_burst")
+    if mega:
+        print(
+            f"  mega-burst {mega['n_vms']} VMs / {mega['n_containers']} "
+            f"containers: {mega['total_wall_s']:.1f} s wall, control-plane "
+            f"build {mega['control_plane_build_s']:.1f} s"
+        )
+
+
+def summarize_trace(d: dict) -> None:
+    print(
+        f"  {d['n_tenants']} tenants x {d['vm_pool_size']} VMs x "
+        f"{d['minutes']} min: prov-time ratio vs baseline "
+        f"{d['prov_time_ratio_vs_baseline']:.3f} "
+        f"({d['prov_time_reduction_pct']:.1f}% less; paper: "
+        f"{d['paper_reduction_pct']}%), peak registry "
+        f"{d['peak_registry_egress_gbps']:.2f} Gbps, "
+        f"failovers={d['failovers']}"
+    )
+
+
+def summarize_registry(d: dict) -> None:
+    top = str(max(int(s) for s in d["shard_counts"]))
+    sp = d["speedup_vs_1_shard"]
+    print(
+        f"  {top} replicated shards: baseline {sp['baseline'][top]:.2f}x, "
+        f"on_demand {sp['on_demand'][top]:.2f}x faster, faasnet "
+        f"{sp['faasnet'][top]:.2f}x (insensitive — §4.3 bottleneck removed)"
+    )
+
+
+def summarize_placement(d: dict) -> None:
+    rows = d["rows"]
+    ft = d["ft_aware_vs_binpack_worst_p99_prov"]
+    rec = d["histogram_vs_fixed_reclaim"]
+    print(
+        f"  {d['n_tenants']} tenants x {d['vm_pool_size']} VMs x "
+        f"{d['minutes']} min: shared pool "
+        f"{rows['shared']['vm_hours']:.1f} VM-h vs exclusive "
+        f"{rows['exclusive']['vm_hours']:.1f} VM-h "
+        f"({d['shared_vs_exclusive_vm_hours_saved_pct']:.1f}% saved)"
+    )
+    print(
+        f"  §5 FT-aware worst p99 prov {ft['ft_aware_s']:.2f} s vs binpack "
+        f"{ft['binpack_s']:.2f} s; histogram reclaim "
+        f"{rec['vm_hours_histogram']:.1f} VM-h / {rec['cold_starts_histogram']} "
+        f"cold starts vs fixed {rec['vm_hours_fixed']:.1f} VM-h / "
+        f"{rec['cold_starts_fixed']}"
+    )
+
+
+SECTIONS = (
+    ("BENCH_scale.json", "scale burst (§4.2)", summarize_scale),
+    ("BENCH_trace.json", "multi-tenant traces (§4.2)", summarize_trace),
+    ("BENCH_registry.json", "registry shard sweep (§4.3)", summarize_registry),
+    ("BENCH_placement.json", "shared pool placement (§3.1/§5)", summarize_placement),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--dir", default=".", help="directory holding the BENCH_*.json artifacts"
+    )
+    args = ap.parse_args()
+    root = Path(args.dir)
+    for fname, title, fn in SECTIONS:
+        print(f"{title} [{fname}]")
+        d = _load(root, fname)
+        if d is not None:
+            try:
+                fn(d)
+            except KeyError as e:  # stale artifact from an older bench version
+                print(f"  [stale] {fname} lacks {e}; re-run its benchmark")
+        print()
+
+
+if __name__ == "__main__":
+    main()

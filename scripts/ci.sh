@@ -112,4 +112,54 @@ print(
 )
 PY
 
+# Shared-pool smoke: memory-aware cross-tenant placement must actually pay.
+# On a short 3-tenant prefix the shared pool (a) spends fewer VM-hours than
+# exclusive leasing, (b) genuinely co-locates tenants (more inserts than
+# reservations), and (c) faasnet still beats the docker-pull baseline on the
+# worst tenant's p99 provisioning latency — all under the per-tick
+# memory/occupancy invariant checks.
+python - <<'PY'
+import time
+from repro.sim import MultiTenantReplay, multi_tenant_config
+
+t0 = time.perf_counter()
+def run(**kw):
+    cfg = multi_tenant_config(
+        n_tenants=3, vm_pool_size=200, minutes=3, failover_at=None,
+        check_partition=True, **kw,
+    )
+    return MultiTenantReplay(cfg).run()
+
+shared = run(placement="shared")
+excl = run(placement="exclusive")
+base = run(placement="shared", system="baseline")
+elapsed = time.perf_counter() - t0
+assert shared.vm_seconds < excl.vm_seconds, (
+    f"placement smoke FAILED: shared pool used {shared.vm_seconds:.0f} VM-s, "
+    f"exclusive {excl.vm_seconds:.0f} VM-s — co-location is not saving "
+    f"capacity"
+)
+stats = shared.manager_stats
+assert stats["inserts"] > stats["reservations"], (
+    f"placement smoke FAILED: {stats['inserts']} inserts vs "
+    f"{stats['reservations']} reservations — no cross-tenant co-location "
+    f"happened"
+)
+worst_f = max(t.p99_prov_s for t in shared.per_tenant.values())
+worst_b = max(t.p99_prov_s for t in base.per_tenant.values())
+assert worst_f < worst_b, (
+    f"placement smoke FAILED: faasnet worst p99 provisioning {worst_f:.2f}s "
+    f"not better than baseline {worst_b:.2f}s on the shared pool"
+)
+budget = 10.0
+assert elapsed < budget, (
+    f"placement smoke FAILED: took {elapsed:.2f} s (budget {budget} s)"
+)
+print(
+    f"placement smoke ok: shared {shared.vm_seconds:.0f} VM-s vs exclusive "
+    f"{excl.vm_seconds:.0f} VM-s, faasnet p99prov {worst_f:.2f}s vs baseline "
+    f"{worst_b:.2f}s, in {elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

@@ -10,6 +10,13 @@ blockstore functionality.
 from .ft_manager import FTManager, VMInfo
 from .function_tree import FTNode, FunctionTree
 from .provisioning import ProvisionState, ProvisionTask, RPCCosts
+from .reclaim import (
+    RECLAIM_POLICIES,
+    FixedTTLReclaim,
+    HistogramReclaim,
+    ReclaimPolicy,
+    resolve_reclaim_policy,
+)
 from .registry import (
     PLACEMENT_POLICIES,
     RegistrySpec,
@@ -64,6 +71,11 @@ __all__ = [
     "ProvisionState",
     "ProvisionTask",
     "RPCCosts",
+    "RECLAIM_POLICIES",
+    "ReclaimPolicy",
+    "FixedTTLReclaim",
+    "HistogramReclaim",
+    "resolve_reclaim_policy",
     "REGISTRY",
     "PLACEMENT_POLICIES",
     "RegistrySpec",

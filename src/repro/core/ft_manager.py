@@ -2,27 +2,38 @@
 
 Responsibilities (all control-plane; no payload bytes flow through here):
   * one :class:`FunctionTree` per function id (``insert``/``delete`` API);
-  * the VM pool: free pool → active pool reservation, idle reclaim after a
-    configurable lifespan (15 min in Alibaba's production config), failure
+  * the VM pool: free pool → active pool reservation, per-instance idle
+    reclaim through a pluggable :class:`~repro.core.reclaim.ReclaimPolicy`
+    (fixed 15-min lifespan in Alibaba's production config), failure
     detection → tree repair;
-  * function→VM placement with the ≤ ``max_functions_per_vm`` limit (20 in
-    production) and the FT-aware placement refinement of paper §5 (prefer
-    VMs that already appear in few trees / as leaves, to balance per-VM
-    in/out bandwidth across overlapping FTs);
+  * function→VM placement admitted by **per-function memory** (each function
+    charges its ``mem_mb`` requirement against the VM's budget — one VM
+    hosts many tenants' functions, paper §3.1) with the ≤
+    ``max_functions_per_vm`` production limit (20) retained as a secondary
+    cap, and the FT-aware placement refinement of paper §5 (prefer VMs that
+    already appear in few trees / as leaves, to balance per-VM in/out
+    bandwidth across overlapping FTs);
   * the ``<function_id, FT>`` metadata map, snapshottable to a dict for the
     etcd-style metadata-store sync the paper describes.
 
 Placement is O(log V) amortized per decision: candidates live in a lazily
-rebuilt min-heap keyed ``(load, seed_load, registration_index)`` (or
-``(-load, registration_index)`` for the pure binpack mode) with stale
-entries dropped on pop — a VM's entry is re-pushed whenever its key
-changes, so the entry matching the current key is always present.
-``seed_load`` (the VM's total outbound child streams across all trees) is
-maintained incrementally from :attr:`FunctionTree.on_reparent` callbacks
-plus the :class:`~repro.core.function_tree.DeleteInfo` record instead of
-re-walking trees.  The tie-break by registration index reproduces the
-original full-pool stable sort exactly, so placement decisions are
-bit-identical to the O(V log V) implementation they replace.
+rebuilt min-heap keyed ``(load, seed_load, mem_used_mb, registration_index)``
+(or ``(-load, -mem_used_mb, registration_index)`` for the pure binpack mode)
+with stale entries dropped on pop — a VM's entry is re-pushed whenever its
+key changes, so the entry matching the current key is always present.
+Entries skipped for *per-function* reasons (the VM already hosts the
+function, or lacks memory for this function's requirement) are pushed back:
+those conditions depend on which function is being placed, so dropping the
+entry would lose the VM for every other function even though its key never
+changes again.  ``seed_load`` (the VM's total outbound child streams across
+all trees) is maintained incrementally from
+:attr:`FunctionTree.on_reparent` callbacks plus the
+:class:`~repro.core.function_tree.DeleteInfo` record instead of re-walking
+trees.  The tie-break by registration index reproduces the original
+full-pool stable sort exactly, so placement decisions are bit-identical to
+the O(V log V) implementation they replace; with uniform (or zero) memory
+requirements the memory key component is monotone in ``load`` and placement
+is bit-identical to the pre-memory implementation.
 """
 from __future__ import annotations
 
@@ -32,6 +43,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from .function_tree import FTNode, FunctionTree
+from .reclaim import ReclaimPolicy, resolve_reclaim_policy, restore_reclaim_policy
 
 
 @dataclass
@@ -39,13 +51,21 @@ class VMInfo:
     vm_id: str
     address: str = ""
     port: int = 0
-    mem_mb: int = 4096
+    mem_mb: int = 4096  # paper §4.1: 2-CPU / 4 GB VMs
     functions: set[str] = field(default_factory=set)  # function ids placed here
     last_active: float = 0.0
     alive: bool = True
+    # Per-function memory accounting (shared pool: one VM, many tenants).
+    func_mem_mb: dict[str, int] = field(default_factory=dict)  # fid -> charged MB
+    mem_used_mb: int = 0  # Σ func_mem_mb.values(), maintained incrementally
+    # Per-instance activity (reclaim is evaluated per (function, vm) pair).
+    func_last_active: dict[str, float] = field(default_factory=dict)
 
     def load(self) -> int:
         return len(self.functions)
+
+    def mem_free_mb(self) -> int:
+        return self.mem_mb - self.mem_used_mb
 
 
 class FTManager:
@@ -57,6 +77,8 @@ class FTManager:
         max_functions_per_vm: int = 20,
         vm_idle_reclaim_s: float = 15 * 60.0,
         ft_aware_placement: bool = True,
+        reclaim: "str | ReclaimPolicy | None" = None,
+        default_function_mem_mb: int = 0,
     ) -> None:
         self.trees: dict[str, FunctionTree] = {}
         self.vms: dict[str, VMInfo] = {}
@@ -65,6 +87,16 @@ class FTManager:
         self.max_functions_per_vm = max_functions_per_vm
         self.vm_idle_reclaim_s = vm_idle_reclaim_s
         self.ft_aware_placement = ft_aware_placement
+        # Reclaim policy (per function-instance); the default fixed-TTL
+        # policy reproduces the legacy per-VM lifespan behaviour exactly.
+        self.reclaim: ReclaimPolicy = resolve_reclaim_policy(
+            reclaim, default_ttl_s=vm_idle_reclaim_s
+        )
+        # Per-function memory requirements (MB charged per placed instance).
+        # 0 (the default) leaves placement constrained only by the flat
+        # function-count cap — bit-identical to the pre-memory manager.
+        self.function_mem: dict[str, int] = {}
+        self.default_function_mem_mb = default_function_mem_mb
         # Incremental placement state --------------------------------------
         self._seed_loads: dict[str, int] = {}  # vm_id -> Σ children over trees
         self._vm_order: dict[str, int] = {}  # registration index (sort tie-break)
@@ -137,11 +169,26 @@ class FTManager:
         self._seed_loads[vm_id] = self._seed_loads.get(vm_id, 0) + delta
         self._heap_push(vm_id)
 
+    # ------------------------------------------------------------------
+    # Per-function memory requirements
+    # ------------------------------------------------------------------
+    def set_function_mem(self, function_id: str, mem_mb: int) -> None:
+        """Register a function's per-instance memory requirement (MB)."""
+        if mem_mb < 0:
+            raise ValueError(f"negative memory requirement for {function_id!r}")
+        self.function_mem[function_id] = int(mem_mb)
+
+    def mem_need(self, function_id: str) -> int:
+        return self.function_mem.get(function_id, self.default_function_mem_mb)
+
     def insert(self, function_id: str, vm_id: str, now: float = 0.0) -> str | None:
         """Add ``vm_id`` to the function's FT; returns the upstream peer id.
 
-        Returns ``None`` when the new node is the root (it will fetch from
-        the registry / backing store instead of a peer).
+        Admission is by memory: the function's requirement must fit in the
+        VM's free memory (the flat ``max_functions_per_vm`` production cap
+        is retained as a secondary limit).  Returns ``None`` when the new
+        node is the root (it will fetch from the registry / backing store
+        instead of a peer).
         """
         vm = self.vms[vm_id]
         if len(vm.functions) >= self.max_functions_per_vm:
@@ -149,9 +196,18 @@ class FTManager:
                 f"placement limit: vm {vm_id} already holds "
                 f"{len(vm.functions)} functions"
             )
+        need = self.mem_need(function_id)
+        if vm.mem_used_mb + need > vm.mem_mb:
+            raise RuntimeError(
+                f"memory limit: vm {vm_id} has {vm.mem_free_mb()} MB free, "
+                f"{function_id} needs {need} MB"
+            )
         ft = self.tree(function_id)
         ft.insert(vm_id)
         vm.functions.add(function_id)
+        vm.func_mem_mb[function_id] = need
+        vm.mem_used_mb += need
+        vm.func_last_active[function_id] = now
         vm.last_active = now
         self.stats["inserts"] += 1
         up = ft.parent_of(vm_id)
@@ -184,23 +240,47 @@ class FTManager:
             self._seed_load_add(info.parent, -1)
         if info.filler is not None and info.filler_parent is not None:
             self._seed_load_add(info.filler_parent, -1)
-        self.vms[vm_id].functions.discard(function_id)
+        vm = self.vms[vm_id]
+        vm.functions.discard(function_id)
+        vm.mem_used_mb -= vm.func_mem_mb.pop(function_id, 0)
+        vm.func_last_active.pop(function_id, None)
         self._heap_push(vm_id)
         self.stats["deletes"] += 1
         if len(ft) == 0:
             del self.trees[function_id]
 
+    def touch_instance(self, function_id: str, vm_id: str, now: float) -> None:
+        """An instance served a request: refresh its (and its VM's) clock."""
+        vm = self.vms[vm_id]
+        if now > vm.last_active:
+            vm.last_active = now
+        if function_id in vm.functions:
+            vm.func_last_active[function_id] = max(
+                vm.func_last_active.get(function_id, 0.0), now
+            )
+
     # ------------------------------------------------------------------
     # Placement (paper §3.3 "Function Placement on VMs" + §5 FT-aware)
     # ------------------------------------------------------------------
     def _heap_key(self, vm: VMInfo) -> tuple:
+        # The memory component sits after (load, seed_load) so that with
+        # uniform requirements (mem_used == load * mem) it is monotone in
+        # load and the ordering — hence every placement decision — is
+        # bit-identical to the pre-memory key.  With heterogeneous
+        # requirements it prefers memory-lighter VMs (FT-aware) or packs
+        # memory-fuller ones first (binpack).
         if self.ft_aware_placement:
             return (
                 len(vm.functions),
                 self._seed_loads.get(vm.vm_id, 0),
+                vm.mem_used_mb,
                 self._vm_order[vm.vm_id],
             )
-        return (-len(vm.functions), self._vm_order[vm.vm_id])  # binpack: fullest first
+        return (  # binpack: fullest first
+            -len(vm.functions),
+            -vm.mem_used_mb,
+            self._vm_order[vm.vm_id],
+        )
 
     def _heap_push(self, vm_id: str) -> None:
         vm = self.vms.get(vm_id)
@@ -219,19 +299,28 @@ class FTManager:
     def pick_vm_for(self, function_id: str, now: float = 0.0) -> Optional[VMInfo]:
         """Choose a host for a new instance of ``function_id``.
 
-        Binpacking baseline: any active VM with spare function slots that
-        does not already host this function.  FT-aware refinement (§5):
-        prefer the VM currently involved in the fewest trees and, among
-        those, one that is a leaf in most of its trees — leaves have zero
-        outbound seeding load, so adding an inbound stream there balances
-        bandwidth.  Falls back to reserving a free VM.
+        Admission is by memory: the VM must have ``mem_need(function_id)``
+        MB free (plus a spare slot under the flat production cap) and must
+        not already host this function.  Binpacking baseline: the fullest
+        such VM.  FT-aware refinement (§5): prefer the VM currently
+        involved in the fewest trees and, among those, one that is a leaf
+        in most of its trees — leaves have zero outbound seeding load, so
+        adding an inbound stream there balances bandwidth.  Falls back to
+        reserving a free VM.
 
         Amortized O(log V): pops the lazily pruned candidate heap until an
-        entry matches its VM's current key; entries skipped only because
-        the VM already hosts ``function_id`` are pushed back afterwards.
+        entry matches its VM's current key.  Entries skipped for
+        *per-function* reasons — the VM already hosts ``function_id``, or
+        its free memory is below *this* function's requirement — are pushed
+        back afterwards: both conditions can differ for the next function
+        placed while the VM's key stays unchanged (so no re-push would ever
+        revive a dropped entry).  Entries failing the function-count cap
+        may be dropped safely: any change to the count changes the key and
+        re-pushes a live entry.
         """
         if len(self._placement_heap) > max(64, 4 * len(self.vms)):
             self._rebuild_heap()  # mostly-stale heap: rebuild and re-amortize
+        need = self.mem_need(function_id)
         heap = self._placement_heap
         skipped: list[tuple] = []
         winner: Optional[VMInfo] = None
@@ -247,7 +336,7 @@ class FTManager:
                 or entry[:-1] != self._heap_key(vm)
             ):
                 continue  # stale or ineligible: the live entry is elsewhere
-            if function_id in vm.functions:
+            if function_id in vm.functions or vm.mem_used_mb + need > vm.mem_mb:
                 if vm_id not in seen:  # keep exactly one live entry per VM
                     seen.add(vm_id)
                     skipped.append(entry)
@@ -277,21 +366,46 @@ class FTManager:
     # ------------------------------------------------------------------
     # Reclaim + failure handling (paper §3.2 delete, §3.3 fault tolerance)
     # ------------------------------------------------------------------
+    def reclaim_instance(self, function_id: str, vm_id: str) -> bool:
+        """Reclaim ONE function instance; release the VM once it empties.
+
+        The single accounting path for every reclaim decision — the policy
+        loop below and the trace replay both route through here, so the
+        ``reclaims`` counter can never drift between them.  Returns True
+        when the VM was returned to the free pool (no instances left).
+        """
+        self.delete(function_id, vm_id)
+        self.stats["reclaims"] += 1
+        vm = self.vms[vm_id]
+        if not vm.functions and vm.alive:
+            self.release_vm(vm_id)
+            return True
+        return False
+
     def reclaim_idle(self, now: float) -> list[str]:
-        """Reclaim VMs idle past the lifespan; their trees rebalance."""
-        reclaimed = []
+        """Apply the reclaim policy to every idle instance (paper §3.2).
+
+        Each ``(function, vm)`` instance ages independently — on a shared
+        pool one VM hosts several tenants' instances and reclaiming one
+        must not evict the others.  A VM with no instances left returns to
+        the free pool; the list of such fully-released VM ids is returned.
+        An instance's clock is its ``func_last_active`` entry (set at insert,
+        refreshed by :meth:`touch_instance`); instances restored from legacy
+        snapshots without per-instance records fall back to the VM-level
+        ``last_active``.
+        """
+        released = []
         for vm in list(self.vms.values()):
-            if (
-                vm.alive
-                and vm.functions
-                and now - vm.last_active >= self.vm_idle_reclaim_s
-            ):
-                for fid in list(vm.functions):
-                    self.delete(fid, vm.vm_id)
-                self.release_vm(vm.vm_id)
-                self.stats["reclaims"] += 1
-                reclaimed.append(vm.vm_id)
-        return reclaimed
+            if not vm.alive or not vm.functions:
+                continue
+            freed = False
+            for fid in sorted(vm.functions):  # deterministic eviction order
+                last = vm.func_last_active.get(fid, vm.last_active)
+                if self.reclaim.should_reclaim(fid, now - last, now):
+                    freed = self.reclaim_instance(fid, vm.vm_id)
+            if freed:
+                released.append(vm.vm_id)
+        return released
 
     def on_vm_failure(self, vm_id: str) -> list[str]:
         """Heartbeat miss: drop the VM from every tree it belongs to.
@@ -308,6 +422,9 @@ class FTManager:
             self.stats["repairs"] += 1
             repaired.append(fid)
         vm.functions.clear()
+        vm.func_mem_mb.clear()
+        vm.func_last_active.clear()
+        vm.mem_used_mb = 0
         return repaired
 
     # ------------------------------------------------------------------
@@ -329,10 +446,15 @@ class FTManager:
         Everything a stand-in scheduler shard needs to continue *bit-
         identically* is captured: tree topologies, per-VM records, the free
         pool in FIFO order, the VM registration order (``_vm_order`` is the
-        placement tie-break, so it must survive the wire), and the telemetry
-        counters (so reclaim/repair accounting stays continuous across the
-        failover).  ``repro.sim.multi_tenant`` round-trips this through
-        ``json.dumps`` mid-replay and proves the replay stream unchanged.
+        placement tie-break, so it must survive the wire), per-VM memory
+        occupancy (charged MB and last-active clock per instance — a shared
+        pool restored without them would re-admit functions a live VM has no
+        room for), the per-function memory requirements, the reclaim-policy
+        state (a predictive policy's learned histograms must keep learning
+        from where they stopped), and the telemetry counters (so
+        reclaim/repair accounting stays continuous across the failover).
+        ``repro.sim.multi_tenant`` round-trips this through ``json.dumps``
+        mid-replay and proves the replay stream unchanged.
         """
         order = sorted(self._vm_order, key=self._vm_order.__getitem__)
         return {
@@ -345,22 +467,49 @@ class FTManager:
                     "functions": sorted(vm.functions),
                     "alive": vm.alive,
                     "last_active": vm.last_active,
+                    "func_mem_mb": {
+                        fid: vm.func_mem_mb[fid] for fid in sorted(vm.func_mem_mb)
+                    },
+                    "func_last_active": {
+                        fid: vm.func_last_active[fid]
+                        for fid in sorted(vm.func_last_active)
+                    },
                 }
                 for vid, vm in self.vms.items()
             },
             "free_pool": list(self.free_pool),
             "vm_order": order,
             "stats": dict(self.stats),
+            "function_mem": dict(sorted(self.function_mem.items())),
+            "default_function_mem_mb": self.default_function_mem_mb,
+            "reclaim": self.reclaim.snapshot(),
         }
 
     @classmethod
     def restore(cls, snap: dict, **kwargs) -> "FTManager":
         mgr = cls(**kwargs)
+        # Legacy snapshots predate per-function memory and pluggable reclaim:
+        # missing keys restore the pre-refactor defaults (zero charged
+        # memory, fixed-TTL policy from the caller's kwargs).
+        mgr.function_mem = {
+            fid: int(m) for fid, m in snap.get("function_mem", {}).items()
+        }
+        mgr.default_function_mem_mb = snap.get(
+            "default_function_mem_mb", mgr.default_function_mem_mb
+        )
+        # Only the snapshot's recorded policy overrides the ctor-built one:
+        # a legacy snapshot (no "reclaim" key) restored with an explicit
+        # reclaim= kwarg keeps the caller's requested policy.
+        if "reclaim" in snap:
+            mgr.reclaim = restore_reclaim_policy(
+                snap["reclaim"], default_ttl_s=mgr.vm_idle_reclaim_s
+            )
         # Registration order is authoritative when recorded; older snapshots
         # fall back to the (insertion-ordered) vms mapping itself.
         for vid in snap.get("vm_order", snap["vms"]):
             mgr._vm_order[vid] = len(mgr._vm_order)
         for vid, v in snap["vms"].items():
+            func_mem = {fid: int(m) for fid, m in v.get("func_mem_mb", {}).items()}
             mgr.vms[vid] = VMInfo(
                 vm_id=vid,
                 address=v["address"],
@@ -369,6 +518,9 @@ class FTManager:
                 functions=set(v["functions"]),
                 last_active=v["last_active"],
                 alive=v["alive"],
+                func_mem_mb=func_mem,
+                mem_used_mb=sum(func_mem.values()),
+                func_last_active=dict(v.get("func_last_active", {})),
             )
             mgr._vm_order.setdefault(vid, len(mgr._vm_order))
         mgr.free_pool = deque(snap["free_pool"])

@@ -1,9 +1,16 @@
 """Discrete-event simulation of FaaSNet provisioning and the paper's baselines."""
+from repro.core.reclaim import (
+    RECLAIM_POLICIES,
+    FixedTTLReclaim,
+    HistogramReclaim,
+    ReclaimPolicy,
+)
 from repro.core.registry import RegistrySpec, ShardResolver
 
 from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
 from .engine import GBPS, FlowSim, NICConfig, SimConfig
 from .multi_tenant import (
+    PLACEMENTS,
     MultiTenantConfig,
     MultiTenantReplay,
     MultiTenantResult,
@@ -28,9 +35,14 @@ from .traces import (
 from .workload import ReplayConfig, TickStats, TraceReplay
 
 __all__ = [
+    "RECLAIM_POLICIES",
+    "ReclaimPolicy",
+    "FixedTTLReclaim",
+    "HistogramReclaim",
     "RegistrySpec",
     "ShardResolver",
     "SYSTEMS",
+    "PLACEMENTS",
     "WaveConfig",
     "provision_wave",
     "scalability_table",

@@ -43,6 +43,9 @@ class WaveConfig:
     hop_latency: float = 0.2
     container_start: float = 2.5  # runc + runtime init once blocks are local
     image_extract_rate: float = 100 * MB  # docker-pull layer extraction
+    # Per-VM memory budget (paper §4.1: 2-CPU / 4 GB VMs) — the admission
+    # denominator for shared-pool placement (repro.sim.multi_tenant).
+    vm_mem_mb: int = 4096
     n_layers: int = 10  # layer count for layer-granular systems (Kraken)
     registry_out_cap: float = 9.5 * GBPS
     # Registry request throttling for block-granular (on-demand) fetchers.

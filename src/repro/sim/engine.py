@@ -148,6 +148,12 @@ class FlowSim:
         self._reg_out: dict[str, float] = {}
         self.peak_shard_egress: dict[str, float] = {}
         self.peak_registry_egress = 0.0
+        # Per-VM NIC accounting: running out/in rate sums per node and the
+        # peak utilization (rate / capacity) any VM NIC reached — the shared
+        # pool's co-location pressure metric (cross-tree flows on one host).
+        self._vm_out: dict[str, float] = {}
+        self._vm_in: dict[str, float] = {}
+        self.peak_nic_utilization = 0.0
 
     # ------------------------------------------------------------------
     def _src_key(self, node: str) -> str:
@@ -303,6 +309,8 @@ class FlowSim:
         """Re-rate the dirty closure, parents before streaming children."""
         cfg = self.cfg
         spec = self.registry
+        touched_out: set[str] = set()
+        touched_in: set[str] = set()
         wl: list[tuple[int, int]] = []
         queued: set[int] = set()
         for f in dirty.values():
@@ -337,8 +345,14 @@ class FlowSim:
                 r = min(r, f.parent.rate)
             if r != f.rate:
                 self._settle(f)
+                delta = r - f.rate
                 if from_registry:
-                    self._reg_out[skey] = self._reg_out.get(skey, 0.0) + (r - f.rate)
+                    self._reg_out[skey] = self._reg_out.get(skey, 0.0) + delta
+                else:
+                    self._vm_out[skey] = self._vm_out.get(skey, 0.0) + delta
+                    touched_out.add(skey)
+                self._vm_in[dst] = self._vm_in.get(dst, 0.0) + delta
+                touched_in.add(dst)
                 f.rate = r
                 f.epoch += 1
                 if r > 0.0:
@@ -359,6 +373,17 @@ class FlowSim:
             total = sum(self._reg_out.values())
             if total > self.peak_registry_egress:
                 self.peak_registry_egress = total
+        for node in touched_out:
+            cap = self._slow_out.get(node, cfg.vm_nic.out_cap)
+            if cap > 0 and cap != math.inf:
+                u = self._vm_out[node] / cap
+                if u > self.peak_nic_utilization:
+                    self.peak_nic_utilization = u
+        if cfg.vm_nic.in_cap > 0 and cfg.vm_nic.in_cap != math.inf:
+            for node in touched_in:
+                u = self._vm_in[node] / cfg.vm_nic.in_cap
+                if u > self.peak_nic_utilization:
+                    self.peak_nic_utilization = u
 
     def _next_completion(self) -> float:
         """Earliest valid completion time (lazily dropping stale heap entries)."""
@@ -382,6 +407,9 @@ class FlowSim:
         del self._in[fl.dst][f.fid]
         if is_registry_node(fl.src):
             self._reg_out[skey] -= f.rate
+        else:
+            self._vm_out[skey] = self._vm_out.get(skey, 0.0) - f.rate
+        self._vm_in[fl.dst] = self._vm_in.get(fl.dst, 0.0) - f.rate
         self.events_processed += 1
         self.trace.append((self.now, f"done#{f.fid} {fl.src}->{fl.dst}/{fl.piece}"))
         # Freed shares on both NICs + the lifted parent-cap on children.

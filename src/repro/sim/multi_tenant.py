@@ -9,6 +9,24 @@ against ONE shared :class:`~repro.sim.engine.FlowSim` and ONE shared VM
 pool, so overlapping waves contend for registry egress/QPS and per-VM NICs
 exactly as in production.
 
+Shared pool (paper §3.1 + §5)
+-----------------------------
+With ``placement="shared"`` (the default) the VM pool is genuinely shared
+across tenants: scale-out goes through
+:meth:`~repro.core.ft_manager.FTManager.pick_vm_for`, which admits a
+function onto an already-warm VM by **memory** (each tenant's ``mem_mb``
+requirement charged against the VM's 4 GB budget) before falling back to a
+fresh reservation.  One VM then participates in several FunctionTrees at
+once — exactly the paper's §3.1 design — and its NIC carries cross-tree
+flows (fetching one tenant's image while seeding another's), which is the
+co-location pressure the §5 FT-aware placement refinement balances.
+Reclaim is evaluated per function-instance through the manager's pluggable
+:class:`~repro.core.reclaim.ReclaimPolicy` (fixed idle-TTL by default, or
+the keep-alive-histogram predictive policy via ``reclaim="histogram"``),
+and a VM returns to the free pool only when its *last* instance is
+reclaimed.  ``placement="exclusive"`` preserves the legacy one-VM-one-tenant
+leasing bit-identically (pinned by ``tests/test_placement.py``).
+
 Scheduler failover (ROADMAP: scheduler-shard metadata sync)
 -----------------------------------------------------------
 At a configurable tick the replay serializes the whole control plane with
@@ -28,11 +46,13 @@ Determinism: arrivals come from the pure LCG in ``repro.sim.traces``,
 tenants are stepped in registration order each tick, and the engine orders
 events by (time, seq) — two runs of the same config are bit-identical.
 
-The free pool and the per-tenant trees partition the VM pool at every tick
-(a VM is free, provisioning for exactly one tenant, or warm for exactly one
-tenant); ``check_partition=True`` asserts this each tick and the
-``--runslow`` soak runs 8 tenants x 2000 VMs with a mid-wave failover
-under that assertion.
+``check_partition=True`` asserts the pool invariant at every tick: in
+exclusive mode, free_pool + the per-tenant trees *partition* the pool; in
+shared mode, every placed instance's memory fits its VM and the occupancy
+sets agree across the FTManager (trees + per-VM records), the replay's
+instance/provisioning maps, and — across a failover — the restored
+snapshot.  The ``--runslow`` soak runs 8 tenants x 2000 VMs with a mid-wave
+failover under that assertion.
 """
 from __future__ import annotations
 
@@ -42,6 +62,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core import FTManager, VMInfo
+from repro.core.reclaim import ReclaimPolicy, resolve_reclaim_policy
 from repro.core.registry import RegistrySpec, ShardResolver, is_registry_node
 from repro.core.topology import DistributionPlan, Flow
 
@@ -75,6 +96,12 @@ class TenantConfig:
     function_duration_s: float = 2.0
     vm_target_factor: float = 1.2
     max_reserve_per_tick: int = 64
+    # Per-instance memory requirement (MB) charged against the hosting VM's
+    # budget under shared placement; must fit a single VM.
+    mem_mb: int = 512
+
+
+PLACEMENTS = ("shared", "exclusive")
 
 
 @dataclass
@@ -89,14 +116,37 @@ class MultiTenantConfig:
     # the two caps above (bit-identical streams); an explicit spec wins.
     registry: Optional[RegistrySpec] = None
     wave: WaveConfig = field(default_factory=WaveConfig)
+    # Pool sharing: "shared" admits tenants onto warm VMs by memory through
+    # pick_vm_for (one VM, many trees — paper §3.1); "exclusive" reproduces
+    # the legacy one-VM-one-tenant leasing bit-identically.
+    placement: str = "shared"
+    # §5 FT-aware placement refinement (False = pure binpack) — only
+    # meaningful under shared placement.
+    ft_aware_placement: bool = True
+    # Reclaim policy: "fixed" (idle-TTL = idle_reclaim_s, the legacy
+    # behaviour), "histogram" (predictive keep-alive), or an instance.
+    reclaim: "str | ReclaimPolicy" = "fixed"
     # Scheduler failover: snapshot/json-round-trip/restore the FTManager at
     # the *start* of this tick (None = never).  The replay must be
     # bit-identical either way.
     failover_at: Optional[int] = None
-    check_partition: bool = False  # assert pool partition every tick
+    check_partition: bool = False  # assert the pool invariant every tick
 
     def duration_s(self) -> int:
         return max((len(t.trace) for t in self.tenants), default=0)
+
+    def reclaim_policy(self) -> ReclaimPolicy:
+        # A policy *instance* in the config is copied (snapshot round-trip)
+        # so each replay owns fresh state — otherwise one run's learned
+        # histograms would leak into the next run of the same config and
+        # break two-run bit-identity.
+        if isinstance(self.reclaim, ReclaimPolicy):
+            from repro.core.reclaim import restore_reclaim_policy
+
+            return restore_reclaim_policy(
+                self.reclaim.snapshot(), default_ttl_s=self.idle_reclaim_s
+            )
+        return resolve_reclaim_policy(self.reclaim, default_ttl_s=self.idle_reclaim_s)
 
     def registry_spec(self) -> RegistrySpec:
         return RegistrySpec.resolve(
@@ -130,6 +180,13 @@ class MultiTenantResult:
     failovers: int
     manager_stats: dict[str, int]
     free_vms: int
+    # Shared-pool economics / pressure telemetry ------------------------
+    vm_seconds: float = 0.0  # ∫ (VMs out of the free pool) dt over the run
+    cold_starts: int = 0  # total provisions (every placement is a cold start)
+    peak_nic_utilization: float = 0.0  # peak per-VM NIC rate / capacity
+
+    def vm_hours(self) -> float:
+        return self.vm_seconds / 3600.0
 
 
 @dataclass
@@ -137,6 +194,7 @@ class _Instance:
     vm_id: str
     busy_until: float = 0.0
     idle_since: float = 0.0
+    served: bool = False  # has handled >=1 request (gates reuse-gap learning)
 
 
 class _TenantState:
@@ -172,8 +230,18 @@ class MultiTenantReplay:
         fids = [t.function_id for t in cfg.tenants]
         if len(set(fids)) != len(fids):
             raise ValueError(f"duplicate tenant function ids: {fids}")
-        self.cfg = cfg
+        if cfg.placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {cfg.placement!r}; one of {PLACEMENTS}"
+            )
         w = cfg.wave
+        for t in cfg.tenants:
+            if t.mem_mb > w.vm_mem_mb:
+                raise ValueError(
+                    f"tenant {t.function_id!r} needs {t.mem_mb} MB but VMs "
+                    f"have {w.vm_mem_mb} MB"
+                )
+        self.cfg = cfg
         spec = cfg.registry_spec()
         self.sim = FlowSim(
             SimConfig(
@@ -186,11 +254,21 @@ class MultiTenantReplay:
         # alongside the FTManager, so a restored scheduler keeps placing
         # blobs exactly where the failed one would have).
         self.resolver = ShardResolver(spec)
-        self.mgr = FTManager(vm_idle_reclaim_s=cfg.idle_reclaim_s)
+        self.mgr = self._new_manager()
         for i in range(cfg.vm_pool_size):
-            self.mgr.add_free_vm(VMInfo(f"vm{i}"))
+            self.mgr.add_free_vm(VMInfo(f"vm{i}", mem_mb=w.vm_mem_mb))
+        for t in cfg.tenants:
+            self.mgr.set_function_mem(t.function_id, t.mem_mb)
         self.tenants: list[_TenantState] = [_TenantState(t) for t in cfg.tenants]
         self.failovers = 0
+        self.vm_seconds = 0.0
+
+    def _new_manager(self) -> FTManager:
+        return FTManager(
+            vm_idle_reclaim_s=self.cfg.idle_reclaim_s,
+            ft_aware_placement=self.cfg.ft_aware_placement,
+            reclaim=self.cfg.reclaim_policy(),
+        )
 
     # ------------------------------------------------------------------
     # Scheduler failover (the tentpole's mid-wave snapshot/restore)
@@ -212,7 +290,12 @@ class MultiTenantReplay:
 
         Legacy snapshots (a bare pre-sharding ``FTManager.snapshot()`` dict,
         no ``manager``/``registry`` envelope) restore with a 1-shard registry
-        built from the config's legacy caps.
+        built from the config's legacy caps.  Snapshots that predate
+        pluggable reclaim / per-function memory restore with the *config's*
+        policy and memory requirements re-applied — the snapshot is
+        authoritative when it carries that state, the config is when it
+        does not (a legacy restore must not silently disable memory
+        admission or swap the requested policy for the fixed default).
         """
         if "manager" in blob:
             mgr_blob = blob["manager"]
@@ -227,8 +310,24 @@ class MultiTenantReplay:
                 )
             )
         self.mgr = FTManager.restore(
-            mgr_blob, vm_idle_reclaim_s=self.cfg.idle_reclaim_s
+            mgr_blob,
+            vm_idle_reclaim_s=self.cfg.idle_reclaim_s,
+            ft_aware_placement=self.cfg.ft_aware_placement,
+            # honored only when the snapshot lacks a recorded policy
+            reclaim=self.cfg.reclaim_policy(),
         )
+        if "function_mem" not in mgr_blob:  # pre-memory snapshot
+            for t in self.cfg.tenants:
+                self.mgr.set_function_mem(t.function_id, t.mem_mb)
+            # re-charge already-placed instances at today's requirements so
+            # admission accounting resumes (legacy runs were exclusive —
+            # one function per VM — so the budget can never be exceeded)
+            for vm in self.mgr.vms.values():
+                for fid in vm.functions:
+                    if fid not in vm.func_mem_mb:
+                        need = self.mgr.mem_need(fid)
+                        vm.func_mem_mb[fid] = need
+                        vm.mem_used_mb += need
 
     def _failover(self) -> None:
         """Kill the scheduler: serialize, discard, restore from the wire copy.
@@ -298,17 +397,22 @@ class MultiTenantReplay:
         ts.instances[vm_id] = _Instance(vm_id, busy_until=now, idle_since=now)
 
     def _reclaim(self, ts: _TenantState, now: float) -> None:
+        """Ask the manager's ReclaimPolicy about every idle instance.
+
+        Accounting goes through :meth:`FTManager.reclaim_instance` — the
+        same path ``FTManager.reclaim_idle`` uses — so the ``reclaims``
+        counter (and the release-when-empty rule of the shared pool) cannot
+        drift between the replay and the manager's own reclaim loop.
+        """
         fid = ts.cfg.function_id
+        policy = self.mgr.reclaim
         for vm_id, inst in list(ts.instances.items()):
-            if (
-                inst.busy_until <= now
-                and now - inst.idle_since >= self.cfg.idle_reclaim_s
+            if inst.busy_until <= now and policy.should_reclaim(
+                fid, now - inst.idle_since, now
             ):
                 del ts.instances[vm_id]
                 ts.flow_of.pop(vm_id, None)
-                self.mgr.delete(fid, vm_id)
-                self.mgr.release_vm(vm_id)
-                self.mgr.stats["reclaims"] += 1
+                self.mgr.reclaim_instance(fid, vm_id)
 
     # ------------------------------------------------------------------
     def _step_tenant(self, ts: _TenantState, t: int, now: float) -> None:
@@ -321,12 +425,22 @@ class MultiTenantReplay:
             ts.queue.append(now)
         completed = 0
         lat_samples: list[float] = []
+        fid = tc.function_id
         for inst in ts.instances.values():
             if not ts.queue:
                 break
             if inst.busy_until <= now:
                 arrival = ts.queue.popleft()
                 resp = (now - arrival) + dur
+                # a *reused* instance was idle (now - idle_since): predictive
+                # reclaim policies learn from this gap.  The first-ever
+                # dispatch after a cold start is provisioning slack, not a
+                # reuse gap — feeding it to the histogram would teach a
+                # bogus ~0 s keep-alive to every freshly provisioned fn.
+                if inst.served:
+                    self.mgr.reclaim.observe_gap(fid, now - inst.idle_since)
+                inst.served = True
+                self.mgr.touch_instance(fid, inst.vm_id, now)
                 inst.busy_until = now + dur
                 inst.idle_since = now + dur
                 ts.responses.append((now + dur, resp))
@@ -341,10 +455,14 @@ class MultiTenantReplay:
         target = int(tc.vm_target_factor * max(rps, n_arr) * dur) + 1
         headroom = target - (len(ts.instances) + len(ts.provisioning))
         deficit = min(deficit, max(0, headroom))
+        shared = self.cfg.placement == "shared"
         for _ in range(min(max(0, deficit), tc.max_reserve_per_tick)):
-            vm = self.mgr.reserve_vm(now)
+            # Shared pool: co-locate onto a warm VM with memory headroom
+            # (pick_vm_for falls back to reserving a free VM); exclusive
+            # leasing always takes a fresh VM.
+            vm = self.mgr.pick_vm_for(fid, now) if shared else self.mgr.reserve_vm(now)
             if vm is None:
-                break  # shared pool exhausted: the tenant waits
+                break  # pool exhausted and no co-location headroom: wait
             self._provision(ts, vm.vm_id, now)
         self._reclaim(ts, now)
         ts.peak_vms = max(ts.peak_vms, len(ts.instances) + len(ts.provisioning))
@@ -367,7 +485,14 @@ class MultiTenantReplay:
         )
 
     def _check_partition(self) -> None:
-        """free_pool + per-tenant {warm, provisioning} partition the VM pool."""
+        """Per-tick pool invariant (mode-dispatched).
+
+        Exclusive mode: free_pool + per-tenant {warm, provisioning} sets
+        partition the VM pool (legacy leasing — a VM belongs to at most one
+        tenant).  Shared mode: tenants may overlap on a VM, so the
+        invariant becomes memory-fit + occupancy consistency — see
+        :meth:`check_shared_invariants`.
+        """
         free = list(self.mgr.free_pool)
         free_set = set(free)
         if len(free) != len(free_set):
@@ -375,9 +500,12 @@ class MultiTenantReplay:
         owned: set[str] = set()
         for ts in self.tenants:
             mine = set(ts.instances) | set(ts.provisioning)
-            overlap = mine & owned
-            if overlap:
-                raise AssertionError(f"vm owned by two tenants: {sorted(overlap)}")
+            if self.cfg.placement == "exclusive":
+                overlap = mine & owned
+                if overlap:
+                    raise AssertionError(
+                        f"vm owned by two tenants: {sorted(overlap)}"
+                    )
             ft = self.mgr.trees.get(ts.cfg.function_id)
             members = set(ft.vm_ids()) if ft is not None else set()
             if members != mine:
@@ -393,6 +521,55 @@ class MultiTenantReplay:
         missing = set(self.mgr.vms) - owned - free_set
         if missing:
             raise AssertionError(f"vm lost (neither free nor owned): {sorted(missing)}")
+        if self.cfg.placement == "shared":
+            self.check_shared_invariants()
+
+    def check_shared_invariants(self) -> None:
+        """Shared-pool invariant: memory fits and occupancy is consistent.
+
+        For every VM: the charged per-function memory sums to
+        ``mem_used_mb`` and fits the budget; the manager's per-VM function
+        set, the per-function trees and the replay's instance/provisioning
+        maps all name exactly the same occupancy.  A VM holding instances
+        must not sit in the free pool.
+        """
+        mgr = self.mgr
+        # replay-side occupancy: fid -> vms (instances ∪ provisioning)
+        replay_occ: dict[str, set[str]] = {
+            ts.cfg.function_id: set(ts.instances) | set(ts.provisioning)
+            for ts in self.tenants
+        }
+        vm_occ: dict[str, set[str]] = {}  # vm -> fids per the replay
+        for fid, vms in replay_occ.items():
+            for v in vms:
+                vm_occ.setdefault(v, set()).add(fid)
+        for vm in mgr.vms.values():
+            if set(vm.func_mem_mb) != vm.functions:
+                raise AssertionError(
+                    f"{vm.vm_id}: charged-memory keys {sorted(vm.func_mem_mb)} "
+                    f"!= functions {sorted(vm.functions)}"
+                )
+            if vm.mem_used_mb != sum(vm.func_mem_mb.values()):
+                raise AssertionError(
+                    f"{vm.vm_id}: mem_used_mb={vm.mem_used_mb} drifted from "
+                    f"Σ charges {sum(vm.func_mem_mb.values())}"
+                )
+            if vm.mem_used_mb > vm.mem_mb:
+                raise AssertionError(
+                    f"{vm.vm_id}: {vm.mem_used_mb} MB placed on a "
+                    f"{vm.mem_mb} MB VM"
+                )
+            for fid, charged in vm.func_mem_mb.items():
+                if charged != mgr.mem_need(fid):
+                    raise AssertionError(
+                        f"{vm.vm_id}/{fid}: charged {charged} MB, "
+                        f"requirement is {mgr.mem_need(fid)} MB"
+                    )
+            if vm.functions != vm_occ.get(vm.vm_id, set()):
+                raise AssertionError(
+                    f"{vm.vm_id}: manager hosts {sorted(vm.functions)}, replay "
+                    f"has {sorted(vm_occ.get(vm.vm_id, set()))}"
+                )
 
     # ------------------------------------------------------------------
     def run(self) -> MultiTenantResult:
@@ -404,6 +581,8 @@ class MultiTenantReplay:
             self.sim.run(until=now)  # advance flows/activations to this tick
             for ts in self.tenants:  # fixed registration order: deterministic
                 self._step_tenant(ts, t, now)
+            # VM-hours: one second per VM currently out of the free pool
+            self.vm_seconds += float(cfg.vm_pool_size - len(self.mgr.free_pool))
             if cfg.check_partition:
                 self._check_partition()
         return self._result()
@@ -446,6 +625,9 @@ class MultiTenantReplay:
             failovers=self.failovers,
             manager_stats=dict(self.mgr.stats),
             free_vms=len(self.mgr.free_pool),
+            vm_seconds=self.vm_seconds,
+            cold_starts=sum(len(ts.prov_latencies) for ts in self.tenants),
+            peak_nic_utilization=self.sim.peak_nic_utilization,
         )
 
 

@@ -79,15 +79,23 @@ def multi_tenant_config(
     failover_at: int | None = 12 * 60,
     check_partition: bool = False,
     registry: "RegistrySpec | None" = None,
+    placement: str = "shared",
+    ft_aware_placement: bool = True,
+    reclaim: str = "fixed",
 ) -> "MultiTenantConfig":
     """The trace-driven companion of :func:`mega_burst_config` (§4.2 waves).
 
     N tenants cycle through the four trace shapes — IoT, synthetic gaming,
     diurnal (phase-staggered so peaks only partially overlap) and constant
     background — all contending for one 2000-VM pool, one registry and one
-    FlowSim, with a scheduler failover mid-wave by default.  The returned
-    config drives :class:`repro.sim.multi_tenant.MultiTenantReplay`;
-    ``benchmarks/bench_trace_replay.py`` is its CLI twin and the
+    FlowSim, with a scheduler failover mid-wave by default.  Each trace
+    shape carries a distinct per-instance memory requirement (gaming 2048 MB
+    … constant 256 MB), so under ``placement="shared"`` co-location on the
+    4 GB VMs is genuinely memory-constrained; ``placement="exclusive"``
+    reproduces the legacy one-VM-one-tenant leasing.  The returned config
+    drives :class:`repro.sim.multi_tenant.MultiTenantReplay`;
+    ``benchmarks/bench_trace_replay.py`` and
+    ``benchmarks/bench_placement.py`` are its CLI twins and the
     ``--runslow`` soak in ``tests/test_multi_tenant.py`` runs it with
     ``check_partition=True``.
     """
@@ -105,23 +113,24 @@ def multi_tenant_config(
         kind = i % 4
         if kind == 0:
             trace = iot_trace(scale=scale)[:duration]
-            name = "iot"
+            name, mem_mb = "iot", 512
         elif kind == 1:
             trace = synthetic_gaming_trace(scale=4 * scale)[:duration]
-            name = "gaming"
+            name, mem_mb = "gaming", 2048
         elif kind == 2:
             trace = diurnal_trace(
                 duration_s=duration, phase_s=150 * i, scale=4 * scale
             )
-            name = "diurnal"
+            name, mem_mb = "diurnal", 1024
         else:
             trace = constant_trace(duration_s=duration, scale=4 * scale)
-            name = "constant"
+            name, mem_mb = "constant", 256
         tenants.append(
             TenantConfig(
                 function_id=f"{name}{i}",
                 trace=trace,
                 seed=seed * 1000 + i,  # decorrelated arrival jitter per tenant
+                mem_mb=mem_mb,
             )
         )
     return MultiTenantConfig(
@@ -132,6 +141,9 @@ def multi_tenant_config(
         failover_at=failover_at,
         check_partition=check_partition,
         registry=registry,
+        placement=placement,
+        ft_aware_placement=ft_aware_placement,
+        reclaim=reclaim,
     )
 
 

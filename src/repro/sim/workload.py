@@ -43,6 +43,17 @@ class ReplayConfig:
     registry_qps: float = 700.0
     # Sharded registry (None = legacy 1 shard built from the caps above).
     registry: Optional[RegistrySpec] = None
+    # Pool placement mode + per-instance memory (MB).  With one tenant,
+    # "shared" degenerates to exclusive leasing bit-identically (every warm
+    # VM already hosts the function, so pick_vm_for always falls back to a
+    # fresh reservation — pinned by tests/test_placement.py), but pays a
+    # full heap drain per reservation doing so; a single-tenant replay IS
+    # exclusive, so that is the default here (multi-tenant defaults stay
+    # "shared").
+    placement: str = "exclusive"
+    mem_mb: int = 512
+    # Reclaim policy: "fixed" (idle_reclaim_s TTL) or "histogram".
+    reclaim: str = "fixed"
     max_reserve_per_tick: int = 64  # scheduler VM-reservation rate limit
     # Scale-out target: reserve until (instances + provisioning) reaches
     # ~target_factor × observed RPS (the paper's scheduler grows the IoT
@@ -78,6 +89,7 @@ class TraceReplay:
                         function_duration_s=cfg.function_duration_s,
                         vm_target_factor=cfg.vm_target_factor,
                         max_reserve_per_tick=cfg.max_reserve_per_tick,
+                        mem_mb=cfg.mem_mb,
                     )
                 ],
                 system=cfg.system,
@@ -86,6 +98,8 @@ class TraceReplay:
                 registry_out_cap=cfg.registry_out_cap,
                 registry_qps=cfg.registry_qps,
                 registry=cfg.registry,
+                placement=cfg.placement,
+                reclaim=cfg.reclaim,
                 wave=cfg.wave,
             )
         )

@@ -44,8 +44,8 @@ def test_idle_reclaim_rebalances():
     vms = [m.reserve_vm(now=0.0) for _ in range(5)]
     for v in vms:
         m.insert("f", v.vm_id, now=0.0)
-    # mark one VM active recently; others idle out
-    m.vms[vms[0].vm_id].last_active = 950.0
+    # mark one instance active recently; others idle out
+    m.touch_instance("f", vms[0].vm_id, 950.0)
     reclaimed = m.reclaim_idle(now=1000.0)
     assert set(reclaimed) == {v.vm_id for v in vms[1:]}
     ft = m.trees["f"]
@@ -340,6 +340,159 @@ def test_snapshot_restore_after_random_churn(seed):
         if len(a.functions) < 6:
             m.insert(fid, a.vm_id, now=1e6 + k)
             r.insert(fid, b.vm_id, now=1e6 + k)
+
+
+# ----------------------------------------------------------------------
+# PR 5: memory-aware shared-pool placement + pluggable reclaim
+# ----------------------------------------------------------------------
+def test_insert_charges_and_delete_refunds_memory():
+    m = _mgr(n_vms=2)
+    m.set_function_mem("big", 3000)
+    m.set_function_mem("small", 1000)
+    vm = m.reserve_vm()
+    m.insert("big", vm.vm_id)
+    assert vm.mem_used_mb == 3000 and vm.func_mem_mb == {"big": 3000}
+    m.insert("small", vm.vm_id)
+    assert vm.mem_used_mb == 4000 and vm.mem_free_mb() == 96
+    m.insert("free_rider", vm.vm_id)  # unregistered fn defaults to 0 MB
+    assert vm.mem_used_mb == 4000
+    m.set_function_mem("big2", 2000)
+    with pytest.raises(RuntimeError, match="memory limit"):
+        m.insert("big2", vm.vm_id)
+    m.delete("big", vm.vm_id)
+    assert vm.mem_used_mb == 1000 and "big" not in vm.func_mem_mb
+    m.insert("big2", vm.vm_id)  # refunded memory re-admits
+    assert vm.mem_used_mb == 3000
+
+
+def test_pick_vm_for_admits_by_memory():
+    """A lighter VM without memory headroom loses to a heavier one with it."""
+    m = _mgr(n_vms=4)
+    m.set_function_mem("fat", 3500)
+    m.set_function_mem("thin", 200)
+    a, b = m.reserve_vm(), m.reserve_vm()
+    m.insert("fat", a.vm_id)  # a: 1 fn, 3500/4096 used
+    m.insert("thin", b.vm_id)
+    m.insert("thin2", b.vm_id)  # b: 2 fns, 400/4096 used
+    m.set_function_mem("newfat", 1000)
+    pick = m.pick_vm_for("newfat")
+    assert pick.vm_id == b.vm_id  # a is lighter-loaded but has no room
+    pick2 = m.pick_vm_for("thin3")  # 0 MB default fits anywhere: prefer a
+    assert pick2.vm_id == a.vm_id
+
+
+def test_mem_skipped_heap_entries_survive_for_other_functions():
+    """Push-back parity (ISSUE 5): a memory-ineligible entry is NOT dropped.
+
+    Skipping for memory is per-function — the same VM must remain a live
+    candidate for a later, smaller function even though no insert/delete
+    (hence no heap re-push) happens in between.  Mirrors the existing
+    ``function_id in vm.functions`` skip handling.
+    """
+    m = _mgr(n_vms=8)
+    m.set_function_mem("resident", 3900)
+    vms = [m.reserve_vm() for _ in range(3)]
+    for v in vms:
+        m.insert("resident", v.vm_id)  # 196 MB free on each
+    m.set_function_mem("huge", 1000)
+    m.set_function_mem("tiny", 100)
+    # pick for "huge": every active VM is memory-ineligible -> free-pool
+    # fallback; the skipped entries must be pushed back, not dropped
+    pick = m.pick_vm_for("huge")
+    assert pick is not None and not pick.functions  # fresh reservation
+    # no mutations on vms[0..2] since the skip; "tiny" (100 <= 196) must
+    # still find an active VM via the heap (vm1: a leaf of the "resident"
+    # tree, so zero seed load beats the root)
+    pick2 = m.pick_vm_for("tiny")
+    assert pick2 is not None and pick2.vm_id == vms[1].vm_id
+    assert pick2.functions  # co-located, not a fresh reservation
+
+
+def test_binpack_mem_key_prefers_fuller_vm():
+    m = _mgr(n_vms=4, ft_aware_placement=False)
+    m.set_function_mem("a", 2000)
+    m.set_function_mem("b", 500)
+    va, vb = m.reserve_vm(), m.reserve_vm()
+    m.insert("a", va.vm_id)  # 1 fn, 2000 MB
+    m.insert("b", vb.vm_id)  # 1 fn, 500 MB
+    m.set_function_mem("c", 100)
+    pick = m.pick_vm_for("c")
+    assert pick.vm_id == va.vm_id  # equal load: binpack onto the fuller VM
+
+
+def test_reclaim_instance_releases_only_empty_vms():
+    m = _mgr(n_vms=3)
+    vm = m.reserve_vm()
+    m.insert("f1", vm.vm_id)
+    m.insert("f2", vm.vm_id)
+    assert m.reclaim_instance("f1", vm.vm_id) is False  # f2 still resident
+    assert vm.vm_id not in m.free_pool
+    assert m.stats["reclaims"] == 1
+    assert m.reclaim_instance("f2", vm.vm_id) is True
+    assert vm.vm_id in m.free_pool
+    assert m.stats["reclaims"] == 2
+
+
+def test_reclaim_idle_is_per_instance():
+    """One VM, two tenants' instances aging independently (shared pool)."""
+    m = _mgr(vm_idle_reclaim_s=100)
+    vm = m.reserve_vm(now=0.0)
+    m.insert("old", vm.vm_id, now=0.0)
+    m.insert("fresh", vm.vm_id, now=0.0)
+    m.touch_instance("fresh", vm.vm_id, 950.0)
+    released = m.reclaim_idle(now=1000.0)
+    assert released == []  # "fresh" keeps the VM out of the free pool
+    assert vm.functions == {"fresh"}  # but "old" was reclaimed
+    assert m.stats["reclaims"] == 1
+    released = m.reclaim_idle(now=2000.0)
+    assert released == [vm.vm_id]  # now empty -> released
+    assert not vm.functions and vm.mem_used_mb == 0
+
+
+def test_reclaim_idle_uses_pluggable_policy():
+    from repro.core import HistogramReclaim
+
+    pol = HistogramReclaim(500.0, bucket_s=10.0, min_ttl_s=20.0,
+                           min_observations=3)
+    m = FTManager(vm_idle_reclaim_s=500.0, reclaim=pol)
+    for i in range(2):
+        m.add_free_vm(VMInfo(f"vm{i}"))
+    vm = m.reserve_vm(now=0.0)
+    m.insert("f", vm.vm_id, now=0.0)
+    # teach the policy that "f" is reused within ~10 s
+    for _ in range(5):
+        pol.observe_gap("f", 8.0)
+    assert pol.keep_alive_s("f") == 20.0  # bucket 0 + safety bucket, >= min_ttl
+    assert m.reclaim_idle(now=15.0) == []  # 15 < 20: keep
+    assert m.reclaim_idle(now=25.0) == [vm.vm_id]  # learned TTL elapsed
+
+
+def test_snapshot_roundtrips_memory_and_policy():
+    import json
+
+    from repro.core import FTManager as Mgr
+    from repro.core import HistogramReclaim
+
+    m = FTManager(reclaim=HistogramReclaim(300.0, bucket_s=10.0))
+    for i in range(4):
+        m.add_free_vm(VMInfo(f"vm{i}"))
+    m.set_function_mem("f1", 1500)
+    m.set_function_mem("f2", 700)
+    vm = m.reserve_vm(now=1.0)
+    m.insert("f1", vm.vm_id, now=1.0)
+    m.insert("f2", vm.vm_id, now=2.0)
+    m.reclaim.observe_gap("f1", 42.0)
+    snap = json.loads(json.dumps(m.snapshot(), sort_keys=True))
+    r = Mgr.restore(snap)
+    rvm = r.vms[vm.vm_id]
+    assert rvm.func_mem_mb == {"f1": 1500, "f2": 700}
+    assert rvm.mem_used_mb == 2200
+    assert rvm.func_last_active == {"f1": 1.0, "f2": 2.0}
+    assert r.function_mem == {"f1": 1500, "f2": 700}
+    assert r.reclaim.snapshot() == m.reclaim.snapshot()
+    # the restored policy keeps learning from where it stopped
+    r.reclaim.observe_gap("f1", 42.0)
+    assert r.reclaim.totals["f1"] == 2
 
 
 def test_snapshot_records_vm_order_and_stats():

@@ -6,8 +6,10 @@ The acceptance bar for the replay subsystem (ISSUE 3):
   * a run with a mid-wave scheduler failover — FTManager.snapshot() ->
     json round-trip -> FTManager.restore() — matches the uninterrupted
     run's TickStats stream *exactly*;
-  * free_pool + the per-tenant trees partition the VM pool at every tick
-    (no lost or duplicated reservations), checked inline by the replay;
+  * the pool invariant holds at every tick, checked inline by the replay:
+    exclusive mode partitions the pool across free_pool + per-tenant trees;
+    shared mode (the default since ISSUE 5) requires every instance's
+    memory to fit its VM and occupancy to agree across manager and replay;
   * faasnet's total provisioning time beats the baseline's (ratio < 1.0).
 
 The 8-tenant x 2000-VM soak (``multi_tenant_config``) is ``--runslow``
@@ -145,15 +147,20 @@ def test_multi_tenant_config_shape():
 # ----------------------------------------------------------------------
 @pytest.mark.slow
 def test_soak_8_tenants_2000_vms_with_failover():
-    """ISSUE 3 soak: mixed traces, one shared platform, partition-checked.
+    """ISSUE 5 soak: mixed traces, one genuinely shared pool, mem-checked.
 
-    ``check_partition=True`` asserts at every one of the 1500 ticks that
-    free_pool + the per-tenant trees partition the 2000-VM pool — a lost or
-    double reservation anywhere in reserve/insert/delete/release/failover
-    raises immediately.  The failed-over run must match the uninterrupted
-    one bit-for-bit at full scale too.
+    ``check_partition=True`` under shared placement asserts at every one of
+    the 1500 ticks that every placed instance's memory fits its VM and that
+    the occupancy sets agree across FTManager (trees + per-VM records) and
+    the replay's instance/provisioning maps — a lost/double reservation or
+    a memory-accounting drift anywhere in pick/insert/delete/release/
+    failover raises immediately.  After the run the control plane is
+    snapshot/restored once more and the restored occupancy must agree too.
+    The failed-over run must match the uninterrupted one bit-for-bit at
+    full scale.
     """
-    failed_over = run_multi_tenant(multi_tenant_config(check_partition=True))
+    replay = MultiTenantReplay(multi_tenant_config(check_partition=True))
+    failed_over = replay.run()
     assert failed_over.failovers == 1
     assert len(failed_over.per_tenant) == 8
     for fid, tr in failed_over.per_tenant.items():
@@ -163,6 +170,21 @@ def test_soak_8_tenants_2000_vms_with_failover():
     # past any single tenant's, and the registry saw concurrent egress
     assert sum(t.peak_vms for t in failed_over.per_tenant.values()) > 1000
     assert failed_over.peak_registry_egress > 0
+    # cross-tenant co-location really happened (one VM, many trees — §3.1)
+    assert any(len(vm.functions) > 1 for vm in replay.mgr.vms.values())
+    # occupancy survives one more snapshot/restore round-trip exactly
+    import json
+
+    from repro.core import FTManager
+
+    restored = FTManager.restore(
+        json.loads(json.dumps(replay.mgr.snapshot(), sort_keys=True))
+    )
+    for vid, vm in replay.mgr.vms.items():
+        r = restored.vms[vid]
+        assert r.functions == vm.functions, vid
+        assert r.func_mem_mb == vm.func_mem_mb, vid
+        assert r.mem_used_mb == vm.mem_used_mb <= vm.mem_mb, vid
     uninterrupted = run_multi_tenant(
         multi_tenant_config(failover_at=None, check_partition=True)
     )

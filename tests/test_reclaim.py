@@ -1,0 +1,187 @@
+"""ReclaimPolicy unit tests: fixed TTL, keep-alive histogram, wire format."""
+import json
+
+import pytest
+
+from repro.core.reclaim import (
+    FixedTTLReclaim,
+    HistogramReclaim,
+    resolve_reclaim_policy,
+    restore_reclaim_policy,
+)
+
+
+def test_fixed_ttl_semantics():
+    pol = FixedTTLReclaim(120.0)
+    assert not pol.should_reclaim("f", 119.9, now=0.0)
+    assert pol.should_reclaim("f", 120.0, now=0.0)
+    pol.observe_gap("f", 5.0)  # fixed policy ignores observations
+    assert not pol.should_reclaim("f", 119.9, now=0.0)
+
+
+def test_resolve_shorthands():
+    assert isinstance(resolve_reclaim_policy(None, default_ttl_s=60), FixedTTLReclaim)
+    assert resolve_reclaim_policy("fixed", default_ttl_s=60).ttl_s == 60.0
+    hist = resolve_reclaim_policy("histogram", default_ttl_s=60)
+    assert isinstance(hist, HistogramReclaim)
+    assert hist.default_ttl_s == 60.0
+    pol = FixedTTLReclaim(5.0)
+    assert resolve_reclaim_policy(pol, default_ttl_s=60) is pol
+    with pytest.raises(ValueError, match="unknown reclaim policy"):
+        resolve_reclaim_policy("lru", default_ttl_s=60)
+
+
+def test_histogram_cold_start_uses_default_ttl():
+    pol = HistogramReclaim(300.0, min_observations=4)
+    assert pol.keep_alive_s("f") == 300.0  # no observations yet
+    for _ in range(3):
+        pol.observe_gap("f", 10.0)
+    assert pol.keep_alive_s("f") == 300.0  # still below min_observations
+    pol.observe_gap("f", 10.0)
+    assert pol.keep_alive_s("f") < 300.0  # learned
+
+
+def test_histogram_learns_per_function():
+    pol = HistogramReclaim(
+        600.0, bucket_s=10.0, min_ttl_s=20.0, min_observations=4
+    )
+    for _ in range(20):
+        pol.observe_gap("bursty", 5.0)  # reused within seconds
+        pol.observe_gap("slow", 95.0)  # reused every ~95 s
+    assert pol.keep_alive_s("bursty") == 20.0  # (0+2)*10 clamped to min_ttl
+    assert pol.keep_alive_s("slow") == 110.0  # bucket 9 -> (9+2)*10
+    assert pol.keep_alive_s("dead") == 600.0  # never reused: default TTL
+    assert pol.should_reclaim("bursty", 25.0, now=0.0)
+    assert not pol.should_reclaim("slow", 25.0, now=0.0)
+
+
+def test_histogram_quantile_tracks_tail():
+    pol = HistogramReclaim(
+        600.0, bucket_s=10.0, min_ttl_s=0.0, quantile=0.5, min_observations=1
+    )
+    for _ in range(9):
+        pol.observe_gap("f", 5.0)
+    pol.observe_gap("f", 205.0)  # one tail gap
+    assert pol.keep_alive_s("f") == 20.0  # median stays in bucket 0
+    p99 = HistogramReclaim(
+        600.0, bucket_s=10.0, min_ttl_s=0.0, quantile=0.99, min_observations=1
+    )
+    for _ in range(9):
+        p99.observe_gap("f", 5.0)
+    p99.observe_gap("f", 205.0)
+    assert p99.keep_alive_s("f") == 220.0  # p99 protects the tail gap
+
+
+def test_histogram_clamps_and_overflow_bucket():
+    pol = HistogramReclaim(
+        100.0, bucket_s=10.0, min_ttl_s=30.0, min_observations=1
+    )
+    pol.observe_gap("f", 0.0)
+    assert pol.keep_alive_s("f") == 30.0  # clamped up to min_ttl
+    pol2 = HistogramReclaim(
+        100.0, bucket_s=10.0, min_observations=1
+    )
+    pol2.observe_gap("g", 10_000.0)  # far past max_ttl: overflow bucket
+    assert pol2.keep_alive_s("g") == 100.0  # clamped down to max_ttl
+    pol2.observe_gap("g", -1.0)  # negative gaps are ignored
+    assert pol2.totals["g"] == 1
+
+
+def test_histogram_validation():
+    with pytest.raises(ValueError, match="bucket_s"):
+        HistogramReclaim(100.0, bucket_s=0.0)
+    with pytest.raises(ValueError, match="quantile"):
+        HistogramReclaim(100.0, quantile=1.5)
+
+
+def test_snapshot_json_roundtrip_is_exact():
+    pol = HistogramReclaim(
+        240.0, bucket_s=5.0, min_ttl_s=10.0, quantile=0.9, min_observations=2
+    )
+    for g in (3.0, 7.0, 3.0, 120.0, 9999.0):
+        pol.observe_gap("a", g)
+    pol.observe_gap("b", 50.0)
+    blob = json.loads(json.dumps(pol.snapshot(), sort_keys=True))
+    back = restore_reclaim_policy(blob, default_ttl_s=999.0)
+    assert isinstance(back, HistogramReclaim)
+    assert back.snapshot() == pol.snapshot()
+    for fid in ("a", "b", "unseen"):
+        assert back.keep_alive_s(fid) == pol.keep_alive_s(fid)
+    fixed = restore_reclaim_policy(
+        json.loads(json.dumps(FixedTTLReclaim(77.0).snapshot())),
+        default_ttl_s=999.0,
+    )
+    assert isinstance(fixed, FixedTTLReclaim) and fixed.ttl_s == 77.0
+
+
+def test_restore_legacy_none_is_fixed_default():
+    pol = restore_reclaim_policy(None, default_ttl_s=420.0)
+    assert isinstance(pol, FixedTTLReclaim) and pol.ttl_s == 420.0
+    with pytest.raises(ValueError, match="unknown reclaim policy"):
+        restore_reclaim_policy({"policy": "martian"}, default_ttl_s=1.0)
+
+
+def test_custom_policy_restores_through_registry():
+    """Subclasses restore polymorphically via the name registry."""
+    from repro.core.reclaim import ReclaimPolicy
+
+    class EagerReclaim(ReclaimPolicy):
+        name = "test_eager"
+
+        def __init__(self, threshold_s: float = 1.0) -> None:
+            self.threshold_s = threshold_s
+
+        def should_reclaim(self, fid, idle_s, now):
+            return idle_s >= self.threshold_s
+
+        def snapshot(self):
+            return {"policy": self.name, "threshold_s": self.threshold_s}
+
+        @classmethod
+        def from_snapshot(cls, blob, *, default_ttl_s):
+            return cls(blob["threshold_s"])
+
+    back = restore_reclaim_policy(
+        json.loads(json.dumps(EagerReclaim(3.5).snapshot())), default_ttl_s=900.0
+    )
+    assert isinstance(back, EagerReclaim) and back.threshold_s == 3.5
+
+
+def test_custom_policy_without_from_snapshot_fails_with_instruction():
+    from repro.core.reclaim import ReclaimPolicy
+
+    class OpaqueReclaim(ReclaimPolicy):
+        name = "test_opaque"
+
+        def should_reclaim(self, fid, idle_s, now):
+            return False
+
+    with pytest.raises(ValueError, match="must override snapshot"):
+        restore_reclaim_policy(OpaqueReclaim().snapshot(), default_ttl_s=1.0)
+
+
+def test_keep_alive_cache_tracks_new_observations():
+    pol = HistogramReclaim(600.0, bucket_s=10.0, min_ttl_s=0.0,
+                           min_observations=1)
+    pol.observe_gap("f", 5.0)
+    assert pol.keep_alive_s("f") == 20.0
+    assert pol.keep_alive_s("f") == 20.0  # memoized path
+    for _ in range(200):
+        pol.observe_gap("f", 155.0)  # the distribution moves
+    assert pol.keep_alive_s("f") == 170.0  # cache was invalidated
+
+
+def test_ftmanager_legacy_restore_honors_reclaim_kwarg():
+    """A legacy snapshot (no reclaim key) + explicit reclaim= keeps the
+    caller's requested policy instead of silently degrading to fixed."""
+    from repro.core import FTManager, VMInfo
+
+    m = FTManager()
+    m.add_free_vm(VMInfo("vm0"))
+    snap = m.snapshot()
+    del snap["reclaim"]  # pre-policy snapshot format
+    r = FTManager.restore(snap, reclaim="histogram")
+    assert isinstance(r.reclaim, HistogramReclaim)
+    r2 = FTManager.restore(m.snapshot(), reclaim="histogram")
+    # a recorded policy is authoritative over the kwarg
+    assert isinstance(r2.reclaim, FixedTTLReclaim)
