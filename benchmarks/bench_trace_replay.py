@@ -15,10 +15,16 @@ FlowSim + VM pool and writes ``BENCH_trace.json`` with:
     bit-identical TickStats stream;
   * two-run determinism of the failover run itself.
 
+Request-level serving (sub-tick dispatch, per-VM CPU slots, herd-controlled
+admission) is ON by default, so the response percentiles are real
+distributions; ``--no-serving`` reverts to the legacy tick-quantized
+dispatch loop, whose p99 collapses to integer seconds.
+
 Usage::
 
     PYTHONPATH=src python benchmarks/bench_trace_replay.py           # 8 x 2000
     PYTHONPATH=src python benchmarks/bench_trace_replay.py --quick   # 3 x 300
+    PYTHONPATH=src python benchmarks/bench_trace_replay.py --no-serving
     PYTHONPATH=src python benchmarks/bench_trace_replay.py --skip-checks
 """
 from __future__ import annotations
@@ -30,9 +36,10 @@ import time
 
 
 def _run(args, *, system: str, failover_at):
-    from repro.sim import MultiTenantReplay, multi_tenant_config
+    from repro.sim import MultiTenantReplay, multi_tenant_config, serving_config
 
-    cfg = multi_tenant_config(
+    factory = multi_tenant_config if args.no_serving else serving_config
+    cfg = factory(
         args.seed,
         n_tenants=args.tenants,
         vm_pool_size=args.pool,
@@ -74,6 +81,12 @@ def main() -> None:
     )
     ap.add_argument("--quick", action="store_true", help="3 tenants / 300 VMs / 8 min")
     ap.add_argument(
+        "--no-serving",
+        action="store_true",
+        help="legacy tick-quantized dispatch (pre-serving response tails; "
+        "p99 collapses to integer seconds)",
+    )
+    ap.add_argument(
         "--skip-checks",
         action="store_true",
         help="skip the parity/determinism re-runs and per-tick partition checks",
@@ -101,6 +114,7 @@ def main() -> None:
         "failover_at_s": args.failover_at,
         "placement": args.placement,
         "reclaim": args.reclaim,
+        "serving": not args.no_serving,
         "vm_hours": res.vm_hours(),
         "peak_nic_utilization": res.peak_nic_utilization,
         "failovers": res.failovers,

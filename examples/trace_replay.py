@@ -24,6 +24,12 @@ the predictive reclaim policy with::
         --placement exclusive
     PYTHONPATH=src python examples/trace_replay.py --multi \
         --reclaim histogram
+
+Request-level serving (sub-tick dispatch, per-VM CPU slots, cold-start herd
+control) reports end-to-end p50/p99 response instead of tick-quantized
+latencies::
+
+    PYTHONPATH=src python examples/trace_replay.py --multi --serving
 """
 import argparse
 import sys
@@ -83,12 +89,18 @@ def single_tenant(args) -> None:
 
 
 def multi_tenant(args) -> None:
-    from repro.sim import MultiTenantConfig, MultiTenantReplay, multi_tenant_config
+    from repro.sim import (
+        MultiTenantConfig,
+        MultiTenantReplay,
+        multi_tenant_config,
+        serving_config,
+    )
 
     spec = _registry_spec(args, MultiTenantConfig())
+    factory = serving_config if args.serving else multi_tenant_config
     results = {}
     for system in ("faasnet", "baseline"):
-        cfg = multi_tenant_config(
+        cfg = factory(
             args.seed,
             n_tenants=args.tenants,
             vm_pool_size=args.pool,
@@ -108,11 +120,19 @@ def multi_tenant(args) -> None:
           f"{args.reclaim} reclaim), "
           f"{args.minutes} min, scheduler failover at t={args.minutes * 30}s "
           f"(failovers={res.failovers})")
-    print(f"{'tenant':12s} {'requests':>8s} {'p99 resp':>9s} {'p99 prov':>9s} "
-          f"{'peak VMs':>8s}")
-    for fid, tr in sorted(res.per_tenant.items()):
-        print(f"{fid:12s} {tr.requests:8d} {tr.p99_response_s:8.1f}s "
-              f"{tr.p99_prov_s:8.1f}s {tr.peak_vms:8d}")
+    if args.serving:
+        print(f"{'tenant':12s} {'requests':>8s} {'p50 resp':>9s} "
+              f"{'p99 resp':>9s} {'wasted':>7s} {'peak VMs':>8s}")
+        for fid, tr in sorted(res.per_tenant.items()):
+            print(f"{fid:12s} {tr.requests:8d} {tr.p50_response_s:8.2f}s "
+                  f"{tr.p99_response_s:8.2f}s {tr.wasted_provisions:7d} "
+                  f"{tr.peak_vms:8d}")
+    else:
+        print(f"{'tenant':12s} {'requests':>8s} {'p99 resp':>9s} "
+              f"{'p99 prov':>9s} {'peak VMs':>8s}")
+        for fid, tr in sorted(res.per_tenant.items()):
+            print(f"{fid:12s} {tr.requests:8d} {tr.p99_response_s:8.1f}s "
+                  f"{tr.p99_prov_s:8.1f}s {tr.peak_vms:8d}")
     base_prov = results["baseline"].total_prov_time_s
     ratio = res.total_prov_time_s / base_prov if base_prov > 0 else float("nan")
     print(f"total provisioning time: faasnet {res.total_prov_time_s:.0f}s vs "
@@ -146,6 +166,10 @@ def main() -> None:
     ap.add_argument("--reclaim", default="fixed",
                     choices=RECLAIM_POLICIES,
                     help="--multi: idle-instance reclaim policy")
+    ap.add_argument("--serving", action="store_true",
+                    help="--multi: request-level serving (sub-tick dispatch, "
+                         "per-VM CPU slots, herd-controlled admission); "
+                         "reports end-to-end p50/p99 response per tenant")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.multi:

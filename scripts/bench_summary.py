@@ -1,12 +1,13 @@
 #!/usr/bin/env python
 """Print the headline numbers from every BENCH_*.json in one table.
 
-Consolidates the four benchmark artifacts the repo produces —
+Consolidates the five benchmark artifacts the repo produces —
 
   * ``BENCH_scale.json``     (benchmarks/bench_scale_1000.py: §4.2 burst)
   * ``BENCH_trace.json``     (benchmarks/bench_trace_replay.py: §4.2 traces)
   * ``BENCH_registry.json``  (benchmarks/bench_registry_sweep.py: §4.3)
   * ``BENCH_placement.json`` (benchmarks/bench_placement.py: §3.1/§5 pool)
+  * ``BENCH_serving.json``   (benchmarks/bench_serving.py: request serving)
 
 — into one terminal summary, so "where do we stand vs the paper" is a
 single command.  Missing files are reported and skipped, never fatal.
@@ -90,11 +91,30 @@ def summarize_placement(d: dict) -> None:
     )
 
 
+def summarize_serving(d: dict) -> None:
+    mix, cold = d["mix"], d["cold_burst"]
+    fa, ba = mix["faasnet"], mix["baseline"]
+    print(
+        f"  mix: {mix['n_tenants']} tenants x {mix['minutes']} min: pooled "
+        f"p50/p99 response {fa['pooled_p50_s']:.2f}/{fa['pooled_p99_s']:.2f} s, "
+        f"platform p99 {fa['platform_p99_s']:.2f} s "
+        f"(baseline {ba['platform_p99_s']:.2f} s)"
+    )
+    h, n = cold["herd"], cold["naive"]
+    print(
+        f"  cold burst {cold['burst_requests']} reqs: herd "
+        f"{h['total_provisioned']} provisioned / {h['total_wasted']} wasted / "
+        f"p99 {h['platform_p99_s']:.2f} s vs naive {n['total_provisioned']} / "
+        f"{n['total_wasted']} / {n['platform_p99_s']:.2f} s"
+    )
+
+
 SECTIONS = (
     ("BENCH_scale.json", "scale burst (§4.2)", summarize_scale),
     ("BENCH_trace.json", "multi-tenant traces (§4.2)", summarize_trace),
     ("BENCH_registry.json", "registry shard sweep (§4.3)", summarize_registry),
     ("BENCH_placement.json", "shared pool placement (§3.1/§5)", summarize_placement),
+    ("BENCH_serving.json", "request-level serving (§4.4)", summarize_serving),
 )
 
 

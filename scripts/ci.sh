@@ -162,4 +162,59 @@ print(
 )
 PY
 
+# Serving smoke: the request-level layer must (a) herd-control cold bursts —
+# one right-sized wave instead of a reservation per queued request, so it
+# wastes no provisions where naive admission wastes hundreds — and (b) keep
+# faasnet's end-to-end p99 response ahead of the docker-pull baseline (every
+# cold request under baseline waits out a full image pull).
+python - <<'PY'
+import time
+from repro.sim import MultiTenantReplay, serving_config
+from repro.sim.multi_tenant import MultiTenantConfig, ServingConfig, TenantConfig
+
+t0 = time.perf_counter()
+def burst(herd):
+    trace = [0.0] * 3 + [500.0] + [0.0] * 26
+    return MultiTenantConfig(
+        tenants=[TenantConfig("cold", trace, seed=3, function_duration_s=0.5,
+                              max_reserve_per_tick=100_000)],
+        vm_pool_size=600,
+        serving=ServingConfig(herd_control=herd),
+        check_partition=True,
+    )
+h = MultiTenantReplay(burst(True)).run().per_tenant["cold"]
+n = MultiTenantReplay(burst(False)).run().per_tenant["cold"]
+assert h.completed == n.completed == 500, (h.completed, n.completed)
+assert h.wasted_provisions < n.wasted_provisions, (
+    f"serving smoke FAILED: herd wasted {h.wasted_provisions} provisions, "
+    f"naive {n.wasted_provisions} — herd control is not paying"
+)
+assert h.provisioned < n.provisioned, (
+    f"serving smoke FAILED: herd provisioned {h.provisioned} >= naive "
+    f"{n.provisioned} — the admission gate is not parking the herd"
+)
+
+p99 = {}
+for system in ("faasnet", "baseline"):
+    cfg = serving_config(n_tenants=3, vm_pool_size=300, minutes=2,
+                         failover_at=None, check_partition=True, system=system)
+    res = MultiTenantReplay(cfg).run()
+    p99[system] = max(tr.p99_response_s for tr in res.per_tenant.values())
+elapsed = time.perf_counter() - t0
+assert p99["faasnet"] < p99["baseline"], (
+    f"serving smoke FAILED: faasnet p99 response {p99['faasnet']:.2f}s not "
+    f"better than baseline {p99['baseline']:.2f}s"
+)
+budget = 10.0
+assert elapsed < budget, (
+    f"serving smoke FAILED: took {elapsed:.2f} s (budget {budget} s)"
+)
+print(
+    f"serving smoke ok: herd {h.provisioned} provisioned/"
+    f"{h.wasted_provisions} wasted vs naive {n.provisioned}/"
+    f"{n.wasted_provisions}, faasnet p99 {p99['faasnet']:.2f}s vs baseline "
+    f"{p99['baseline']:.2f}s, in {elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

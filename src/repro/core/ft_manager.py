@@ -97,6 +97,13 @@ class FTManager:
         # function-count cap — bit-identical to the pre-memory manager.
         self.function_mem: dict[str, int] = {}
         self.default_function_mem_mb = default_function_mem_mb
+        # Scale-from-zero wave locks (request serving, cold-start herd
+        # control): function id -> containers of its in-flight provisioning
+        # wave still awaiting activation.  While an entry exists the serving
+        # layer parks further scale-out for that function, so a cold-start
+        # request herd triggers exactly ONE wave instead of a reservation
+        # per queued request.  Scheduler state: rides the failover snapshot.
+        self.wave_locks: dict[str, int] = {}
         # Incremental placement state --------------------------------------
         self._seed_loads: dict[str, int] = {}  # vm_id -> Σ children over trees
         self._vm_order: dict[str, int] = {}  # registration index (sort tie-break)
@@ -108,6 +115,7 @@ class FTManager:
             "repairs": 0,
             "reclaims": 0,
             "reservations": 0,
+            "waves": 0,
         }
 
     # ------------------------------------------------------------------
@@ -364,6 +372,45 @@ class FTManager:
         return n
 
     # ------------------------------------------------------------------
+    # Provisioning-wave locks (request serving: cold-start herd control)
+    # ------------------------------------------------------------------
+    def wave_active(self, function_id: str) -> bool:
+        """True while a provisioning wave is in flight for the function."""
+        return function_id in self.wave_locks
+
+    def wave_open(self, function_id: str, n: int) -> None:
+        """Open the per-function wave lock: ``n`` containers now in flight.
+
+        The serving layer opens one lock per scale-out decision and parks
+        all further scale-out for the function until every container of the
+        wave has activated — the thundering-herd gate that turns a
+        10k-request cold burst into exactly one wave.  The pending count is
+        scheduler state and rides :meth:`snapshot`, so a restored scheduler
+        keeps the herd parked until the surviving data-plane streams land.
+        """
+        if n <= 0:
+            raise ValueError(f"wave for {function_id!r} needs n >= 1, got {n}")
+        if function_id in self.wave_locks:
+            raise RuntimeError(f"wave already in flight for {function_id!r}")
+        self.wave_locks[function_id] = n
+        self.stats["waves"] += 1
+
+    def wave_landed(self, function_id: str) -> bool:
+        """One wave container activated; True when the whole wave landed.
+
+        A no-op (returns False) for functions without an open lock — e.g.
+        containers provisioned by the naive per-deficit admission path.
+        """
+        pending = self.wave_locks.get(function_id)
+        if pending is None:
+            return False
+        if pending <= 1:
+            del self.wave_locks[function_id]
+            return True
+        self.wave_locks[function_id] = pending - 1
+        return False
+
+    # ------------------------------------------------------------------
     # Reclaim + failure handling (paper §3.2 delete, §3.3 fault tolerance)
     # ------------------------------------------------------------------
     def reclaim_instance(self, function_id: str, vm_id: str) -> bool:
@@ -483,6 +530,9 @@ class FTManager:
             "function_mem": dict(sorted(self.function_mem.items())),
             "default_function_mem_mb": self.default_function_mem_mb,
             "reclaim": self.reclaim.snapshot(),
+            # In-flight provisioning waves (cold-start herd control): a
+            # restored scheduler must keep parked request herds parked.
+            "wave_locks": {fid: self.wave_locks[fid] for fid in sorted(self.wave_locks)},
         }
 
     @classmethod
@@ -504,6 +554,10 @@ class FTManager:
             mgr.reclaim = restore_reclaim_policy(
                 snap["reclaim"], default_ttl_s=mgr.vm_idle_reclaim_s
             )
+        # Legacy (pre-serving) snapshots carry no wave locks: none in flight.
+        mgr.wave_locks = {
+            fid: int(n) for fid, n in snap.get("wave_locks", {}).items()
+        }
         # Registration order is authoritative when recorded; older snapshots
         # fall back to the (insertion-ordered) vms mapping itself.
         for vid in snap.get("vm_order", snap["vms"]):

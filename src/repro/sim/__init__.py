@@ -14,6 +14,7 @@ from .multi_tenant import (
     MultiTenantConfig,
     MultiTenantReplay,
     MultiTenantResult,
+    ServingConfig,
     TenantConfig,
     TenantResult,
     run_multi_tenant,
@@ -25,6 +26,7 @@ from .scale import (
     mega_burst_config,
     multi_tenant_config,
     run_scale,
+    serving_config,
 )
 from .traces import (
     constant_trace,
@@ -54,6 +56,7 @@ __all__ = [
     "MultiTenantConfig",
     "MultiTenantReplay",
     "MultiTenantResult",
+    "ServingConfig",
     "TenantConfig",
     "TenantResult",
     "run_multi_tenant",
@@ -63,6 +66,7 @@ __all__ = [
     "mega_burst_config",
     "multi_tenant_config",
     "run_scale",
+    "serving_config",
     "constant_trace",
     "diurnal_trace",
     "iot_trace",

@@ -42,6 +42,20 @@ the shard map, the failed-over run emits a
 **bit-identical** :class:`TickStats` stream versus an uninterrupted run — pinned by ``tests/test_multi_tenant.py`` and the
 ``scripts/ci.sh`` trace smoke.
 
+Request-level serving (ROADMAP: end-to-end p50/p99 response)
+------------------------------------------------------------
+Attaching a :class:`ServingConfig` (``serving=``) swaps the tick-quantized
+one-request-per-instance-per-tick dispatch loop for a request-level one:
+arrivals are stamped at sub-second offsets, a per-function FIFO queue is
+drained against instance *free times* (so response latency is continuous,
+not a multiple of 1 s), co-located requests contend for per-VM CPU slots,
+and scale-out happens in herd-controlled provisioning *waves* — a cold
+function hit by a 10k-request burst issues exactly one wave under the
+per-function in-flight-wave lock instead of a reservation per queued
+request.  ``serving=None`` (the default) keeps the pre-serving path
+bit-identically — pinned by the differential goldens in
+``tests/test_request_serving.py``.
+
 Determinism: arrivals come from the pure LCG in ``repro.sim.traces``,
 tenants are stepped in registration order each tick, and the engine orders
 events by (time, seq) — two runs of the same config are bit-identical.
@@ -56,7 +70,9 @@ failover under that assertion.
 """
 from __future__ import annotations
 
+import heapq
 import json
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
@@ -68,7 +84,7 @@ from repro.core.topology import DistributionPlan, Flow
 
 from .cluster import WaveConfig
 from .engine import GBPS, FlowSim, SimConfig
-from .traces import arrivals_for_second
+from .traces import arrival_offsets, arrivals_for_second
 
 
 @dataclass
@@ -105,6 +121,54 @@ PLACEMENTS = ("shared", "exclusive")
 
 
 @dataclass
+class ServingConfig:
+    """Request-level serving knobs (``None`` on the config = legacy path).
+
+    With a ``ServingConfig`` attached, the replay measures *end-to-end
+    request latency* instead of tick-quantized provisioning echoes:
+
+    * **Sub-tick dispatch** — arrivals are stamped at ``t + offset`` (the
+      LCG in :func:`repro.sim.traces.arrival_offsets`) and the per-function
+      FIFO queue is drained against instance *free times*, not 1 s quanta,
+      so the response-latency distribution is continuous.
+    * **Per-VM CPU slots** (``cpu_slots``, paper §4.1: 2-CPU VMs) — a VM
+      running ``k`` concurrent requests at dispatch time stretches the new
+      request's service time by ``max(1, k / cpu_slots)``: co-located busy
+      instances contend for the CPU, not just the NIC.
+    * **Cold-start herd control** (``herd_control``) — scale-out happens in
+      provisioning *waves* guarded by the per-function in-flight-wave lock
+      (:meth:`repro.core.ft_manager.FTManager.wave_open` /
+      :meth:`~repro.core.ft_manager.FTManager.wave_landed`; the lock rides
+      the failover snapshot).  While a wave is in flight the request herd
+      parks in the queue and drains as containers land.  A wave is sized to
+      sustain the **median** arrival rate over the trailing
+      ``rate_window_s`` (median, not instantaneous: a one-tick 10k-request
+      burst must not buy a VM per queued request) plus enough instances to
+      drain the current backlog within ``drain_budget_s``.  With
+      ``herd_control=False`` admission reproduces the pre-serving
+      scheduler's naive one-reservation-per-deficit-unit rule (still with
+      sub-tick dispatch) — the bench's comparison baseline.
+    """
+
+    cpu_slots: int = 2
+    herd_control: bool = True
+    drain_budget_s: float = 15.0
+    rate_window_s: int = 30
+
+    def __post_init__(self) -> None:
+        if self.cpu_slots < 1:
+            raise ValueError(f"cpu_slots must be >= 1, got {self.cpu_slots}")
+        if self.drain_budget_s <= 0:
+            raise ValueError(
+                f"drain_budget_s must be > 0, got {self.drain_budget_s}"
+            )
+        if self.rate_window_s < 1:
+            raise ValueError(
+                f"rate_window_s must be >= 1, got {self.rate_window_s}"
+            )
+
+
+@dataclass
 class MultiTenantConfig:
     tenants: list[TenantConfig] = field(default_factory=list)
     system: str = "faasnet"  # faasnet | baseline | on_demand
@@ -126,6 +190,11 @@ class MultiTenantConfig:
     # Reclaim policy: "fixed" (idle-TTL = idle_reclaim_s, the legacy
     # behaviour), "histogram" (predictive keep-alive), or an instance.
     reclaim: "str | ReclaimPolicy" = "fixed"
+    # Request-level serving (sub-tick dispatch, CPU slots, herd control).
+    # ``None`` keeps the pre-serving one-request-per-instance-per-tick
+    # dispatch loop BIT-identically (goldens pinned in
+    # tests/test_request_serving.py + tests/test_placement.py).
+    serving: Optional[ServingConfig] = None
     # Scheduler failover: snapshot/json-round-trip/restore the FTManager at
     # the *start* of this tick (None = never).  The replay must be
     # bit-identical either way.
@@ -166,6 +235,12 @@ class TenantResult:
     prov_makespan_s: float  # first reservation -> last container ready
     peak_vms: int
     provisioned: int
+    # Serving-era telemetry (p50 also populated on legacy runs) ----------
+    p50_response_s: float = 0.0
+    # Instances whose lifetime service time never paid back the
+    # provisioning latency they cost (serving mode only) — the
+    # herd-control bench's headline waste metric.
+    wasted_provisions: int = 0
 
 
 @dataclass
@@ -195,6 +270,8 @@ class _Instance:
     busy_until: float = 0.0
     idle_since: float = 0.0
     served: bool = False  # has handled >=1 request (gates reuse-gap learning)
+    prov_cost_s: float = 0.0  # provisioning latency this instance cost
+    busy_total_s: float = 0.0  # lifetime service time delivered (serving mode)
 
 
 class _TenantState:
@@ -213,6 +290,13 @@ class _TenantState:
         self.requests: int = 0
         self.peak_vms: int = 0
         self.timeline: list[TickStats] = []
+        # Serving-mode state (unused on the legacy dispatch path) ----------
+        self.dispatch_log: list[tuple[float, float]] = []  # (arrival, start)
+        self.in_flight: list[float] = []  # min-heap of completion times
+        self.completed_done: int = 0  # completions popped from in_flight
+        self.wasted: int = 0  # reclaimed instances that never served
+        self.arrival_window: deque[int] = deque()  # last rate_window_s counts
+        self.stretch_window: deque[float] = deque()  # per-tick mean CPU stretch
 
 
 def _pctl(sorted_vals: list[float], q: float) -> float:
@@ -262,6 +346,9 @@ class MultiTenantReplay:
         self.tenants: list[_TenantState] = [_TenantState(t) for t in cfg.tenants]
         self.failovers = 0
         self.vm_seconds = 0.0
+        # Serving mode: per-VM completion times of in-flight requests across
+        # ALL tenants (lazily pruned) — the CPU-slot contention denominator.
+        self._vm_busy: dict[str, list[float]] = {}
 
     def _new_manager(self) -> FTManager:
         return FTManager(
@@ -278,12 +365,23 @@ class MultiTenantReplay:
 
         The registry spec and the shard resolver's assignment state are part
         of the snapshot so a restored scheduler keeps the same shard map.
+        Under request serving (version 3) the per-function FIFO request
+        queues cross the wire too — a parked herd must survive the failover
+        — alongside the wave locks inside the manager snapshot.
         """
-        return {
+        blob = {
             "version": 2,
             "manager": self.mgr.snapshot(),
             "registry": self.resolver.snapshot(),
         }
+        if self.cfg.serving is not None:
+            blob["version"] = 3
+            blob["serving"] = {
+                "queues": {
+                    ts.cfg.function_id: list(ts.queue) for ts in self.tenants
+                }
+            }
+        return blob
 
     def restore_snapshot(self, blob: dict) -> None:
         """Rebuild the control plane from :meth:`snapshot` output.
@@ -328,6 +426,13 @@ class MultiTenantReplay:
                         need = self.mgr.mem_need(fid)
                         vm.func_mem_mb[fid] = need
                         vm.mem_used_mb += need
+        # Serving snapshots (version 3) carry the parked request queues;
+        # a legacy snapshot restored into a serving replay keeps the live
+        # queues (nothing recorded, nothing to overwrite).
+        if "serving" in blob:
+            queues = blob["serving"]["queues"]
+            for ts in self.tenants:
+                ts.queue = deque(queues.get(ts.cfg.function_id, []))
 
     def _failover(self) -> None:
         """Kill the scheduler: serialize, discard, restore from the wire copy.
@@ -338,6 +443,11 @@ class MultiTenantReplay:
         the wire.
         """
         blob = json.dumps(self.snapshot(), sort_keys=True)
+        if self.cfg.serving is not None:
+            # The parked herd dies with the failed scheduler: only the wire
+            # copy can bring the queues back (proves the snapshot complete).
+            for ts in self.tenants:
+                ts.queue.clear()
         self.restore_snapshot(json.loads(blob))
         self.failovers += 1
 
@@ -394,7 +504,14 @@ class MultiTenantReplay:
         t_req = ts.provisioning.pop(vm_id, now)
         ts.prov_latencies.append(now - t_req)
         ts.last_ready_t = max(ts.last_ready_t, now)
-        ts.instances[vm_id] = _Instance(vm_id, busy_until=now, idle_since=now)
+        ts.instances[vm_id] = _Instance(
+            vm_id, busy_until=now, idle_since=now, prov_cost_s=now - t_req
+        )
+        sv = self.cfg.serving
+        if sv is not None and sv.herd_control:
+            # one container of the function's in-flight wave landed; when
+            # the whole wave is down the lock lifts and scale-out may resume
+            self.mgr.wave_landed(ts.cfg.function_id)
 
     def _reclaim(self, ts: _TenantState, now: float) -> None:
         """Ask the manager's ReclaimPolicy about every idle instance.
@@ -410,12 +527,22 @@ class MultiTenantReplay:
             if inst.busy_until <= now and policy.should_reclaim(
                 fid, now - inst.idle_since, now
             ):
+                if (
+                    self.cfg.serving is not None
+                    and inst.busy_total_s < inst.prov_cost_s
+                ):
+                    # economically wasted: the instance never served enough
+                    # to pay back the provisioning latency it cost
+                    ts.wasted += 1
                 del ts.instances[vm_id]
                 ts.flow_of.pop(vm_id, None)
                 self.mgr.reclaim_instance(fid, vm_id)
 
     # ------------------------------------------------------------------
     def _step_tenant(self, ts: _TenantState, t: int, now: float) -> None:
+        if self.cfg.serving is not None:
+            self._step_tenant_serving(ts, t, now)
+            return
         tc = ts.cfg
         rps = tc.trace[t] if t < len(tc.trace) else 0.0
         dur = tc.function_duration_s
@@ -484,6 +611,200 @@ class MultiTenantReplay:
             )
         )
 
+    # ------------------------------------------------------------------
+    # Request-level serving (ServingConfig attached): sub-tick dispatch,
+    # per-VM CPU slots and cold-start herd control.
+    # ------------------------------------------------------------------
+    def _step_tenant_serving(self, ts: _TenantState, t: int, now: float) -> None:
+        tc, sv = ts.cfg, self.cfg.serving
+        assert sv is not None
+        rps = tc.trace[t] if t < len(tc.trace) else 0.0
+        n_arr = arrivals_for_second(rps, t, tc.seed)
+        ts.requests += n_arr
+        # Arrivals are stamped inside the second (sorted offsets keep the
+        # FIFO queue globally ordered by arrival time).
+        for off in arrival_offsets(n_arr, t, tc.seed):
+            ts.queue.append(now + off)
+        ts.arrival_window.append(n_arr)
+        while len(ts.arrival_window) > sv.rate_window_s:
+            ts.arrival_window.popleft()
+        # Requests dispatched in earlier ticks whose service finished by now
+        # leave the in-flight set (conservation: completed + in_flight +
+        # queued == requests, asserted by _check_partition).
+        while ts.in_flight and ts.in_flight[0] <= now:
+            heapq.heappop(ts.in_flight)
+            ts.completed_done += 1
+        completed, lat_samples = self._drain_queue(ts, now)
+        self._scale_out_serving(ts, t, now, rps, n_arr)
+        self._reclaim(ts, now)
+        ts.peak_vms = max(ts.peak_vms, len(ts.instances) + len(ts.provisioning))
+        ft = self.mgr.trees.get(tc.function_id)
+        lat_samples.sort()
+        ts.timeline.append(
+            TickStats(
+                t=t,
+                rps=rps,
+                arrivals=n_arr,
+                completed=completed,
+                mean_response_s=(
+                    sum(lat_samples) / len(lat_samples) if lat_samples else 0.0
+                ),
+                p99_response_s=_pctl(lat_samples, 0.99),
+                active_vms=len(ts.instances) + len(ts.provisioning),
+                provisioning_vms=len(ts.provisioning),
+                ft_height=ft.height if ft is not None else 0,
+            )
+        )
+
+    def _drain_queue(self, ts: _TenantState, now: float) -> tuple[int, list[float]]:
+        """FIFO-dispatch queued requests against instance *free times*.
+
+        Each instance serves one request at a time; the earliest-free
+        instance takes the head of the queue at ``start = max(arrival,
+        free)`` (a start inside the previous second is a request the
+        scheduler would have dispatched between ticks — the discrete replay
+        settles it here, retroactively but deterministically).  Service
+        time stretches by the hosting VM's CPU-slot contention: ``k``
+        requests already running on the VM (across ALL tenants) at start
+        time make the new one take ``dur * max(1, (k+1)/cpu_slots)``.
+        Dispatch stops at the tick horizon — an instance not free before
+        ``now + 1`` parks the rest of the queue for the next tick.
+        """
+        sv = self.cfg.serving
+        assert sv is not None
+        tc = ts.cfg
+        fid, dur = tc.function_id, tc.function_duration_s
+        if not ts.instances or not ts.queue:
+            return 0, []
+        horizon = now + 1.0
+        # (free_time, insertion_order, vm_id): insertion order breaks ties
+        # deterministically and matches the legacy scan order.
+        heap: list[tuple[float, int, str]] = [
+            (inst.busy_until, i, vm_id)
+            for i, (vm_id, inst) in enumerate(ts.instances.items())
+        ]
+        heapq.heapify(heap)
+        completed = 0
+        stretch_sum = 0.0
+        lat_samples: list[float] = []
+        while ts.queue:
+            free, order, vm_id = heap[0]
+            if free >= horizon:
+                break  # nobody frees up inside this tick: herd stays parked
+            arrival = ts.queue.popleft()
+            start = max(arrival, free)
+            busy = self._vm_busy.setdefault(vm_id, [])
+            # lazily prune requests that finished before this start
+            if busy:
+                busy[:] = [f for f in busy if f > start]
+            stretch = max(1.0, (len(busy) + 1) / sv.cpu_slots)
+            finish = start + dur * stretch
+            busy.append(finish)
+            inst = ts.instances[vm_id]
+            if inst.served:
+                # reuse gap for predictive reclaim (same gating as legacy:
+                # the first post-cold-start dispatch is provisioning slack)
+                self.mgr.reclaim.observe_gap(
+                    fid, max(0.0, start - inst.idle_since)
+                )
+            inst.served = True
+            self.mgr.touch_instance(fid, vm_id, start)
+            inst.busy_until = finish
+            inst.idle_since = finish
+            inst.busy_total_s += finish - start
+            ts.responses.append((finish, finish - arrival))
+            ts.dispatch_log.append((arrival, start))
+            heapq.heappush(ts.in_flight, finish)
+            lat_samples.append(finish - arrival)
+            completed += 1
+            stretch_sum += stretch
+            heapq.heapreplace(heap, (finish, order, vm_id))
+        if completed:
+            # Feed the observed contention back to the admission gate: wave
+            # sizing uses the *effective* service time (nominal duration x
+            # median observed stretch), so a tenant squeezed by a
+            # neighbour's burst provisions its way back to stability.
+            ts.stretch_window.append(stretch_sum / completed)
+            while len(ts.stretch_window) > sv.rate_window_s:
+                ts.stretch_window.popleft()
+        return completed, lat_samples
+
+    def _scale_out_serving(
+        self, ts: _TenantState, t: int, now: float, rps: float, n_arr: int
+    ) -> None:
+        """Admission gate: wave-sized scale-out under the in-flight-wave lock.
+
+        ``herd_control=False`` reproduces the pre-serving scheduler's naive
+        one-reservation-per-deficit-unit rule verbatim (the bench baseline).
+        With herd control, a cold function hit by a 10k-request burst issues
+        exactly ONE provisioning wave: while the wave is in flight
+        (:meth:`FTManager.wave_active`) no further reservations happen — the
+        herd parks in the FIFO queue and drains as containers land.  The
+        wave is sized for the *median* arrival rate over the trailing
+        window (spike-immune) plus enough instances to drain the current
+        backlog within ``drain_budget_s``, capped by the contention-adjusted
+        target (legacy target scaled by the median observed CPU stretch).
+        """
+        tc, sv = ts.cfg, self.cfg.serving
+        assert sv is not None
+        fid, dur = tc.function_id, tc.function_duration_s
+        shared = self.cfg.placement == "shared"
+        target = int(tc.vm_target_factor * max(rps, n_arr) * dur) + 1
+        if not sv.herd_control:
+            deficit = (
+                len(ts.queue)
+                - sum(1 for i in ts.instances.values() if i.busy_until <= now)
+                - len(ts.provisioning)
+            )
+            headroom = target - (len(ts.instances) + len(ts.provisioning))
+            deficit = min(deficit, max(0, headroom))
+            for _ in range(min(max(0, deficit), tc.max_reserve_per_tick)):
+                vm = (
+                    self.mgr.pick_vm_for(fid, now)
+                    if shared
+                    else self.mgr.reserve_vm(now)
+                )
+                if vm is None:
+                    break
+                self._provision(ts, vm.vm_id, now)
+            return
+        if self.mgr.wave_active(fid):
+            return  # one wave at a time: the herd stays parked
+        window = sorted(ts.arrival_window)
+        median = float(window[len(window) // 2]) if window else 0.0
+        # Size by the effective service time: co-located busy instances
+        # stretch execution, so nominal-duration capacity math undershoots
+        # exactly when a neighbouring tenant bursts onto shared VMs.  The
+        # median observed per-tick stretch (1.0 when nothing has been
+        # dispatched yet — a cold burst sizes its one wave unstretched)
+        # scales sustain, backlog AND the target cap; without the last one
+        # the legacy cap would pin a squeezed tenant below offered load
+        # forever.
+        sw = sorted(ts.stretch_window)
+        eff_dur = dur * (sw[len(sw) // 2] if sw else 1.0)
+        sustain = (
+            int(tc.vm_target_factor * median * eff_dur) + 1 if median > 0 else 0
+        )
+        backlog = math.ceil(len(ts.queue) * eff_dur / sv.drain_budget_s)
+        desired = min(
+            max(sustain, backlog),
+            int(tc.vm_target_factor * max(rps, n_arr) * eff_dur) + 1,
+        )
+        current = len(ts.instances) + len(ts.provisioning)
+        issued = 0
+        for _ in range(max(0, desired - current)):
+            vm = (
+                self.mgr.pick_vm_for(fid, now)
+                if shared
+                else self.mgr.reserve_vm(now)
+            )
+            if vm is None:
+                break  # pool exhausted: the wave is what we could get
+            self._provision(ts, vm.vm_id, now)
+            issued += 1
+        if issued:
+            self.mgr.wave_open(fid, issued)
+
     def _check_partition(self) -> None:
         """Per-tick pool invariant (mode-dispatched).
 
@@ -523,6 +844,29 @@ class MultiTenantReplay:
             raise AssertionError(f"vm lost (neither free nor owned): {sorted(missing)}")
         if self.cfg.placement == "shared":
             self.check_shared_invariants()
+        if self.cfg.serving is not None:
+            self._check_conservation()
+
+    def _check_conservation(self) -> None:
+        """Serving-mode request conservation (per tenant, every tick).
+
+        Every request ever admitted is exactly one of: dispatched (it has a
+        response record) or still queued — and every dispatched request is
+        either done or in flight.  A dropped or double-counted request
+        breaks one of the two equalities.
+        """
+        for ts in self.tenants:
+            fid = ts.cfg.function_id
+            if ts.requests != len(ts.responses) + len(ts.queue):
+                raise AssertionError(
+                    f"{fid}: requests={ts.requests} != dispatched="
+                    f"{len(ts.responses)} + queued={len(ts.queue)}"
+                )
+            if ts.completed_done + len(ts.in_flight) != len(ts.responses):
+                raise AssertionError(
+                    f"{fid}: completed={ts.completed_done} + in_flight="
+                    f"{len(ts.in_flight)} != dispatched={len(ts.responses)}"
+                )
 
     def check_shared_invariants(self) -> None:
         """Shared-pool invariant: memory fits and occupancy is consistent.
@@ -611,6 +955,17 @@ class MultiTenantReplay:
                 ),
                 peak_vms=ts.peak_vms,
                 provisioned=len(prov),
+                p50_response_s=_pctl(resp, 0.50),
+                wasted_provisions=ts.wasted
+                + (
+                    sum(
+                        1
+                        for i in ts.instances.values()
+                        if i.busy_total_s < i.prov_cost_s
+                    )
+                    if self.cfg.serving is not None
+                    else 0
+                ),
             )
         return MultiTenantResult(
             system=self.cfg.system,

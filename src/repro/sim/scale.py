@@ -147,6 +147,41 @@ def multi_tenant_config(
     )
 
 
+def serving_config(
+    seed: int = 0,
+    *,
+    herd_control: bool = True,
+    cpu_slots: int = 2,
+    drain_budget_s: float = 15.0,
+    rate_window_s: int = 30,
+    **kwargs,
+) -> "MultiTenantConfig":
+    """The request-serving companion of :func:`multi_tenant_config`.
+
+    Same 8-tenant diurnal mix against the shared 2000-VM pool, but with a
+    :class:`repro.sim.multi_tenant.ServingConfig` attached: arrivals are
+    stamped at sub-second offsets, the per-function FIFO queues drain
+    against instance free times (end-to-end p50/p99 response is the
+    headline metric instead of provisioning makespan), co-located requests
+    contend for per-VM CPU slots and scale-out runs in herd-controlled
+    provisioning waves.  ``herd_control=False`` keeps sub-tick dispatch but
+    reverts admission to the legacy one-reservation-per-deficit-unit rule —
+    the comparison baseline ``benchmarks/bench_serving.py`` measures
+    against.  Remaining ``kwargs`` pass through to
+    :func:`multi_tenant_config`.
+    """
+    from .multi_tenant import ServingConfig
+
+    cfg = multi_tenant_config(seed, **kwargs)
+    cfg.serving = ServingConfig(
+        cpu_slots=cpu_slots,
+        herd_control=herd_control,
+        drain_budget_s=drain_budget_s,
+        rate_window_s=rate_window_s,
+    )
+    return cfg
+
+
 @dataclass
 class ScaleResult:
     makespan: float  # sim seconds: last payload fully fetched

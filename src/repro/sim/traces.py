@@ -97,3 +97,23 @@ def arrivals_for_second(rps: float, t: int, seed: int = 0) -> int:
     frac = (x / 0x7FFFFFFF)
     base = int(rps)
     return base + (1 if frac < (rps - base) else 0)
+
+
+def arrival_offsets(n: int, t: int, seed: int = 0) -> list[float]:
+    """``n`` sorted sub-second arrival offsets in [0, 1) for second ``t``.
+
+    Same LCG family as :func:`arrivals_for_second`, decorrelated per request
+    index.  The request-serving layer (``repro.sim.multi_tenant`` with a
+    :class:`~repro.sim.multi_tenant.ServingConfig`) stamps each arrival at
+    ``t + offset`` so dispatch — and hence the response-latency
+    distribution — is not quantized to the 1 s tick boundary.  Sorted
+    ascending, so appending a tick's offsets keeps the per-function FIFO
+    queue globally ordered by arrival time.  Deterministic: pinned by a
+    golden checksum in ``tests/test_traces.py``.
+    """
+    out = []
+    for i in range(n):
+        x = (1103515245 * (t * 2654435761 + seed + 40503 * (i + 1)) + 12345) & 0x7FFFFFFF
+        out.append(x / 0x80000000)
+    out.sort()
+    return out

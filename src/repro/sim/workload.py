@@ -22,6 +22,7 @@ from .engine import GBPS
 from .multi_tenant import (
     MultiTenantConfig,
     MultiTenantReplay,
+    ServingConfig,
     TenantConfig,
     TickStats,
 )
@@ -60,6 +61,10 @@ class ReplayConfig:
     # burst to ~82 VMs at 100 RPS rather than one VM per queued request).
     vm_target_factor: float = 1.2
     wave: WaveConfig = field(default_factory=WaveConfig)
+    # Request-level serving knobs (sub-tick dispatch, CPU slots, herd
+    # control); ``None`` keeps the legacy tick-quantized dispatch loop
+    # bit-identically — see :class:`repro.sim.multi_tenant.ServingConfig`.
+    serving: Optional[ServingConfig] = None
     seed: int = 0
 
 
@@ -101,6 +106,7 @@ class TraceReplay:
                 placement=cfg.placement,
                 reclaim=cfg.reclaim,
                 wave=cfg.wave,
+                serving=cfg.serving,
             )
         )
         replay.run()

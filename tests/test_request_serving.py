@@ -1,0 +1,482 @@
+"""Request-level serving (ISSUE 6): goldens, herd control, invariants.
+
+The acceptance bar for the serving tentpole:
+
+  * with ``serving=None`` (the default) every pre-serving code path is
+    bit-identical — the PR 3-5 exclusive-mode golden still holds and the
+    legacy deficit scheduler is reproduced tick-for-tick by the
+    ``herd_control=False`` admission rule while nothing has activated;
+  * the per-tenant response-latency stream under serving is pinned by a
+    SHA-256 golden, and a mid-wave scheduler failover — whose snapshot now
+    carries the parked FIFO queues and the in-flight wave locks — replays
+    bit-identically against an uninterrupted run;
+  * a 10k-request single-tick burst on a cold function triggers exactly
+    ONE provisioning wave, sized far below one-VM-per-request, and no
+    request is dropped;
+  * request conservation (``requests == dispatched + queued`` and
+    ``dispatched == completed + in_flight``) holds every tick across
+    shared/exclusive placement x fixed/histogram reclaim, and dispatch is
+    FIFO: arrival and start times are non-decreasing in dispatch order;
+  * sub-tick dispatch yields non-degenerate (non-tick-quantized) response
+    latency distributions — the ``p99_response_s == 7.0`` artifact class
+    is gone.
+
+Property tests run twice: seeded ``random.Random`` sweeps always run;
+hypothesis variants run only when ``hypothesis`` is installed (same
+optional-dep gating as ``tests/test_function_tree.py``).
+"""
+import hashlib
+import json
+import random
+
+import pytest
+
+from repro.core import FTManager
+from repro.sim import (
+    MultiTenantConfig,
+    MultiTenantReplay,
+    ReplayConfig,
+    ServingConfig,
+    TenantConfig,
+    TraceReplay,
+    constant_trace,
+    diurnal_trace,
+    run_multi_tenant,
+    serving_config,
+    synthetic_gaming_trace,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
+
+from test_placement import GOLDEN_EXCLUSIVE_3T, _stream_hash, _three_tenant_cfg
+
+# 3 serving tenants (gaming burst / diurnal / steady) x 250 VMs x 3 min,
+# shared placement: SHA-256 of the per-tenant (completion_t, latency)
+# response stream.  Captured when the serving layer landed, with
+# contention-aware wave sizing (effective service time feedback).
+GOLDEN_SERVING_3T = (
+    "70edf3161d5c485b89f81d5a5bf0d8a239e48c5495c131703f9782c77f5f5ea3"
+)
+
+
+def _serving_3t_cfg(**kw) -> MultiTenantConfig:
+    dur = 3 * 60
+    gaming = synthetic_gaming_trace()[10 * 60 : 10 * 60 + dur]
+    kw.setdefault("serving", ServingConfig())
+    return MultiTenantConfig(
+        tenants=[
+            TenantConfig("gaming", gaming, seed=1),
+            TenantConfig(
+                "diurnal", diurnal_trace(duration_s=dur, phase_s=300), seed=2
+            ),
+            TenantConfig("steady", constant_trace(duration_s=dur), seed=3),
+        ],
+        system="faasnet",
+        vm_pool_size=250,
+        idle_reclaim_s=120.0,
+        placement="shared",
+        check_partition=True,
+        **kw,
+    )
+
+
+def _response_hash(replay: MultiTenantReplay) -> str:
+    lines = []
+    for ts in replay.tenants:
+        for t, lat in ts.responses:
+            lines.append(f"{ts.cfg.function_id} {t!r} {lat!r}")
+    return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+def _burst_cfg(
+    herd: bool, burst: int = 10_000, ticks: int = 60, **tenant_kw
+) -> MultiTenantConfig:
+    trace = [0.0] * 5 + [float(burst)] + [0.0] * (ticks - 6)
+    tenant_kw.setdefault("max_reserve_per_tick", 100_000)
+    return MultiTenantConfig(
+        tenants=[TenantConfig("cold", trace, seed=3, **tenant_kw)],
+        vm_pool_size=2000,
+        serving=ServingConfig(herd_control=herd),
+        check_partition=True,
+    )
+
+
+# ----------------------------------------------------------------------
+# ServingConfig validation + defaults-off wiring
+# ----------------------------------------------------------------------
+def test_serving_knobs_default_off():
+    assert MultiTenantConfig().serving is None
+    assert ReplayConfig().serving is None
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"cpu_slots": 0},
+        {"drain_budget_s": 0.0},
+        {"drain_budget_s": -1.0},
+        {"rate_window_s": 0},
+    ],
+)
+def test_serving_config_rejects_bad_knobs(kw):
+    with pytest.raises(ValueError):
+        ServingConfig(**kw)
+
+
+def test_serving_config_factory_attaches_knobs():
+    cfg = serving_config(minutes=1, herd_control=False, cpu_slots=4)
+    assert cfg.serving is not None
+    assert cfg.serving.cpu_slots == 4
+    assert not cfg.serving.herd_control
+    assert len(cfg.tenants) == 8
+
+
+def test_defaults_off_reproduces_pre_serving_golden():
+    """The PR 3-5 exclusive golden is untouched with serving knobs off.
+
+    This is the differential half of the tentpole: the dispatch hot loop
+    was rewritten, but a config that never mentions serving must produce
+    the exact pre-serving TickStats stream.
+    """
+    res = run_multi_tenant(_three_tenant_cfg("exclusive"))
+    assert _stream_hash(res) == GOLDEN_EXCLUSIVE_3T
+
+
+# ----------------------------------------------------------------------
+# Golden + mid-wave failover (satellite 2)
+# ----------------------------------------------------------------------
+def test_serving_golden_3t():
+    rep = MultiTenantReplay(_serving_3t_cfg())
+    rep.run()
+    assert _response_hash(rep) == GOLDEN_SERVING_3T
+
+
+def test_serving_failover_mid_wave_bit_identical():
+    """Failover at t=62 (gaming burst in flight) must not move a response.
+
+    A Spy subclass captures the wire blob to prove the snapshot carries
+    REAL serving state — a non-empty parked queue and an in-flight wave
+    lock — and ``_failover`` clears the live queues before restoring, so a
+    bit-identical stream means the queues genuinely crossed the wire.
+    """
+    captured = {}
+
+    class Spy(MultiTenantReplay):
+        def snapshot(self):
+            blob = super().snapshot()
+            captured.update(json.loads(json.dumps(blob)))
+            return blob
+
+    rep = Spy(_serving_3t_cfg(failover_at=62))
+    res = rep.run()
+    assert res.failovers == 1
+    assert captured["version"] == 3
+    locks = captured["manager"]["wave_locks"]
+    assert locks.get("gaming", 0) > 0  # wave in flight at snapshot time
+    parked = captured["serving"]["queues"]
+    assert len(parked["gaming"]) > 0  # the herd is parked in the queue
+    assert _response_hash(rep) == GOLDEN_SERVING_3T
+
+
+def test_serving_snapshot_restores_into_fresh_replay():
+    """A serving snapshot restores queues + locks into a new replay object."""
+    rep = MultiTenantReplay(_serving_3t_cfg())
+    for t in range(63):
+        now = float(t)
+        rep.sim.run(until=now)
+        for ts in rep.tenants:
+            rep._step_tenant(ts, t, now)
+    blob = json.loads(json.dumps(rep.snapshot(), sort_keys=True))
+    fresh = MultiTenantReplay(_serving_3t_cfg())
+    fresh.restore_snapshot(blob)
+    assert fresh.mgr.wave_locks == rep.mgr.wave_locks
+    assert fresh.mgr.wave_locks.get("gaming", 0) > 0
+    for a, b in zip(fresh.tenants, rep.tenants):
+        assert list(a.queue) == list(b.queue)
+    assert any(fresh.tenants[0].queue)  # gaming's parked herd came across
+
+
+# ----------------------------------------------------------------------
+# FTManager wave-lock bookkeeping (control-plane unit tests)
+# ----------------------------------------------------------------------
+def test_wave_lock_open_land_cycle():
+    mgr = FTManager()
+    assert not mgr.wave_active("f")
+    assert not mgr.wave_landed("f")  # landing without a wave is a no-op
+    mgr.wave_open("f", 3)
+    assert mgr.wave_active("f")
+    assert mgr.stats["waves"] == 1
+    assert not mgr.wave_landed("f")
+    assert not mgr.wave_landed("f")
+    assert mgr.wave_landed("f")  # third landing closes the wave
+    assert not mgr.wave_active("f")
+
+
+def test_wave_lock_rejects_double_open_and_bad_size():
+    mgr = FTManager()
+    mgr.wave_open("f", 2)
+    with pytest.raises(RuntimeError):
+        mgr.wave_open("f", 1)
+    with pytest.raises(ValueError):
+        mgr.wave_open("g", 0)
+
+
+def test_wave_locks_ride_manager_snapshot():
+    mgr = FTManager()
+    mgr.wave_open("a", 5)
+    mgr.wave_open("b", 1)
+    mgr.wave_landed("a")
+    blob = json.loads(json.dumps(mgr.snapshot(), sort_keys=True))
+    restored = FTManager.restore(blob)
+    assert restored.wave_locks == {"a": 4, "b": 1}
+    assert restored.wave_active("a") and restored.wave_active("b")
+
+
+# ----------------------------------------------------------------------
+# Cold-start herd regression (satellite 3)
+# ----------------------------------------------------------------------
+def test_cold_burst_triggers_exactly_one_wave():
+    res = run_multi_tenant(_burst_cfg(herd=True))
+    tr = res.per_tenant["cold"]
+    tc = _burst_cfg(herd=True).tenants[0]
+    target = int(tc.vm_target_factor * 10_000 * tc.function_duration_s) + 1
+    assert res.manager_stats["waves"] == 1  # the herd bought ONE wave
+    assert tr.provisioned <= target
+    # far below one-VM-per-request: the wave is backlog/drain-budget sized
+    assert tr.provisioned < 10_000 // 4
+    assert tr.requests == 10_000
+    assert tr.completed == tr.requests  # no request dropped
+    assert tr.wasted_provisions == 0
+
+
+def test_naive_admission_overprovisions_versus_herd():
+    herd = run_multi_tenant(_burst_cfg(herd=True)).per_tenant["cold"]
+    naive = run_multi_tenant(_burst_cfg(herd=False)).per_tenant["cold"]
+    assert naive.completed == naive.requests == 10_000
+    assert herd.provisioned < naive.provisioned
+    assert herd.wasted_provisions <= naive.wasted_provisions
+
+
+def test_naive_admission_reproduces_legacy_deficit_rule():
+    """herd_control=False == today's scheduler, tick for tick.
+
+    While nothing has activated the two dispatch loops cannot diverge
+    (there are no instances to serve from), so the reservation stream must
+    be IDENTICAL to the legacy path — per tick, not just in total.  Run a
+    trace short enough that no container lands inside it.
+    """
+    for max_res in (64, 100_000):
+        trace = [0.0, 0.0, 0.0, 10_000.0, 0.0, 0.0]
+
+        def cfg(serving):
+            return MultiTenantConfig(
+                tenants=[
+                    TenantConfig(
+                        "cold", list(trace), seed=3,
+                        max_reserve_per_tick=max_res,
+                    )
+                ],
+                vm_pool_size=2000,
+                serving=serving,
+                check_partition=True,
+            )
+
+        legacy = run_multi_tenant(cfg(None))
+        naive = run_multi_tenant(cfg(ServingConfig(herd_control=False)))
+        leg_tl = legacy.timelines["cold"]
+        nav_tl = naive.timelines["cold"]
+        assert [t.provisioning_vms for t in leg_tl] == [
+            t.provisioning_vms for t in nav_tl
+        ]
+        assert [t.active_vms for t in leg_tl] == [t.active_vms for t in nav_tl]
+        assert (
+            legacy.per_tenant["cold"].provisioned
+            == naive.per_tenant["cold"].provisioned
+        )
+
+
+# ----------------------------------------------------------------------
+# Tick-quantization regression (satellite 4)
+# ----------------------------------------------------------------------
+def _bursty_trace() -> list[float]:
+    trace = [5.0] * 90
+    for t in range(30, 45):
+        trace[t] = 120.0
+    return trace
+
+
+def test_legacy_dispatch_is_tick_quantized():
+    """The artifact being fixed: every legacy latency is an exact integer."""
+    replay = TraceReplay(ReplayConfig(vm_pool_size=300))
+    replay.run(_bursty_trace())
+    lats = [lat for _, lat in replay.responses]
+    assert len(lats) > 1000
+    assert all(lat == int(lat) for lat in lats)
+
+
+def test_serving_dispatch_is_not_tick_quantized():
+    replay = TraceReplay(
+        ReplayConfig(vm_pool_size=300, serving=ServingConfig())
+    )
+    replay.run(_bursty_trace())
+    lats = [lat for _, lat in replay.responses]
+    assert len(lats) > 1000
+    fractional = [lat for lat in lats if lat != int(lat)]
+    # non-degenerate: the distribution is continuous, not a handful of
+    # integer spikes
+    assert len(fractional) > len(lats) * 0.3
+    assert len({round(lat % 1.0, 6) for lat in fractional}) > 50
+    lats.sort()
+    p99 = lats[int(0.99 * (len(lats) - 1))]
+    assert p99 != int(p99)
+
+
+# ----------------------------------------------------------------------
+# Conservation + FIFO monotonicity properties (satellite 1)
+# ----------------------------------------------------------------------
+def _random_trace(rng: random.Random, n: int) -> list[float]:
+    trace = []
+    level = rng.uniform(0.0, 10.0)
+    for _ in range(n):
+        if rng.random() < 0.15:  # occasional burst / lull
+            level = rng.choice([0.0, rng.uniform(20.0, 60.0), rng.uniform(0, 5)])
+        trace.append(level)
+    return trace
+
+
+def _assert_serving_invariants(rep: MultiTenantReplay) -> None:
+    for ts in rep.tenants:
+        # conservation at end of run (every tick already asserted via
+        # check_partition -> _check_conservation)
+        assert ts.requests == len(ts.responses) + len(ts.queue)
+        assert ts.completed_done + len(ts.in_flight) == len(ts.responses)
+        # FIFO: dispatch order == arrival order (wait times need NOT be
+        # monotone — a later arrival can hit an idle instance)
+        arrivals = [a for a, _ in ts.dispatch_log]
+        assert arrivals == sorted(arrivals)
+        for a, s in ts.dispatch_log:
+            assert s >= a  # no request starts before it arrives
+        # Start times are non-decreasing within each tick's dispatch batch
+        # (TickStats.completed gives the batch sizes).  Across ticks an
+        # instance that landed mid-tick may legitimately back-fill an
+        # earlier start than the previous tick's last dispatch — the
+        # scheduler could not have known about capacity that had not
+        # activated yet.
+        i = 0
+        for tick in ts.timeline:
+            batch = [s for _, s in ts.dispatch_log[i : i + tick.completed]]
+            assert batch == sorted(batch), f"tick {tick.t}: {batch}"
+            i += tick.completed
+        assert i == len(ts.dispatch_log)
+
+
+@pytest.mark.parametrize("placement", ["shared", "exclusive"])
+@pytest.mark.parametrize("reclaim", ["fixed", "histogram"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_conservation_and_fifo_seeded(placement, reclaim, seed):
+    rng = random.Random(seed)
+    cfg = MultiTenantConfig(
+        tenants=[
+            TenantConfig("a", _random_trace(rng, 50), seed=seed),
+            TenantConfig("b", _random_trace(rng, 50), seed=seed + 1),
+        ],
+        vm_pool_size=120,
+        idle_reclaim_s=20.0,
+        placement=placement,
+        reclaim=reclaim,
+        serving=ServingConfig(
+            cpu_slots=rng.choice([1, 2, 4]),
+            herd_control=rng.random() < 0.5,
+            drain_budget_s=rng.uniform(5.0, 20.0),
+            rate_window_s=rng.randrange(5, 40),
+        ),
+        check_partition=True,  # conservation asserted every tick
+    )
+    rep = MultiTenantReplay(cfg)
+    rep.run()
+    _assert_serving_invariants(rep)
+    assert sum(ts.requests for ts in rep.tenants) > 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        rates=st.lists(
+            st.floats(min_value=0.0, max_value=40.0, allow_nan=False),
+            min_size=5,
+            max_size=30,
+        ),
+        placement=st.sampled_from(["shared", "exclusive"]),
+        reclaim=st.sampled_from(["fixed", "histogram"]),
+        herd=st.booleans(),
+        slots=st.integers(min_value=1, max_value=4),
+        budget=st.floats(min_value=1.0, max_value=25.0),
+        seed=st.integers(min_value=0, max_value=1000),
+    )
+    def test_conservation_and_fifo_hypothesis(
+        rates, placement, reclaim, herd, slots, budget, seed
+    ):
+        cfg = MultiTenantConfig(
+            tenants=[TenantConfig("f", list(rates), seed=seed)],
+            vm_pool_size=100,
+            idle_reclaim_s=10.0,
+            placement=placement,
+            reclaim=reclaim,
+            serving=ServingConfig(
+                cpu_slots=slots, herd_control=herd, drain_budget_s=budget
+            ),
+            check_partition=True,
+        )
+        rep = MultiTenantReplay(cfg)
+        rep.run()
+        _assert_serving_invariants(rep)
+
+
+# ----------------------------------------------------------------------
+# CPU-slot contention
+# ----------------------------------------------------------------------
+def test_cpu_slots_stretch_colocated_requests():
+    """k busy co-residents stretch service by (k+1)/cpu_slots, floored at 1.
+
+    Two tenants pinned onto the SAME VM by memory-constrained shared
+    placement: with cpu_slots=1, overlapping requests must take longer
+    than the nominal duration; with ample slots they never stretch.
+    """
+
+    def cfg(slots):
+        return MultiTenantConfig(
+            tenants=[
+                TenantConfig("a", [4.0] * 30, seed=1, mem_mb=512),
+                TenantConfig("b", [4.0] * 30, seed=2, mem_mb=512),
+            ],
+            vm_pool_size=1,  # one VM: everyone co-locates on it
+            serving=ServingConfig(cpu_slots=slots, herd_control=False),
+            check_partition=True,
+        )
+
+    stretched = MultiTenantReplay(cfg(1))
+    stretched.run()
+    roomy = MultiTenantReplay(cfg(16))
+    roomy.run()
+    dur = 2.0
+    service = lambda rep: [  # noqa: E731
+        f - s
+        for ts in rep.tenants
+        for (_, s), (f, _) in zip(ts.dispatch_log, ts.responses)
+    ]
+    tight = service(stretched)
+    wide = service(roomy)
+    assert any(t > dur for t in tight)  # contention stretched something
+    assert all(abs(w - dur) < 1e-9 for w in wide)  # no stretch with slots
+    assert max(tight) <= dur * 8  # bounded by co-residency, not unbounded

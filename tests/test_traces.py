@@ -15,7 +15,7 @@ from repro.sim import (
     iot_trace,
     synthetic_gaming_trace,
 )
-from repro.sim.traces import arrivals_for_second
+from repro.sim.traces import arrival_offsets, arrivals_for_second
 
 
 def _digest(trace: list[float]) -> str:
@@ -130,3 +130,32 @@ def test_arrivals_integer_floor_and_seed_sensitivity():
     seq_a = [arrivals_for_second(2.5, t, seed=0) for t in range(64)]
     seq_b = [arrivals_for_second(2.5, t, seed=1) for t in range(64)]
     assert seq_a != seq_b  # seeds genuinely decorrelate tenants
+
+
+# ----------------------------------------------------------------------
+# Sub-second arrival offsets (the request-serving layer's dispatch stamps)
+# ----------------------------------------------------------------------
+def test_arrival_offsets_pinned():
+    assert [round(x, 6) for x in arrival_offsets(5, 7, seed=3)] == [
+        0.214918, 0.261858, 0.308798, 0.355737, 0.402677,
+    ]
+    grid = []
+    for t in range(40):
+        for n in (0, 1, 3, 8):
+            grid.extend(arrival_offsets(n, t, seed=t % 5))
+    assert (
+        hashlib.sha256(repr(grid).encode()).hexdigest()
+        == "33adbd99a7e6dccb9565c57e69df3a21c5832a2d6fb75eaa49cc3cbba5226d34"
+    )
+
+
+def test_arrival_offsets_shape():
+    for t in (0, 13, 999):
+        for n in (0, 1, 7, 100):
+            offs = arrival_offsets(n, t, seed=t)
+            assert len(offs) == n
+            assert offs == sorted(offs)  # keeps the FIFO queue ordered
+            assert all(0.0 <= x < 1.0 for x in offs)
+    # seeds and ticks genuinely decorrelate
+    assert arrival_offsets(6, 3, seed=1) != arrival_offsets(6, 3, seed=2)
+    assert arrival_offsets(6, 3, seed=1) != arrival_offsets(6, 4, seed=1)
