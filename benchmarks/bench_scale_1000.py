@@ -13,10 +13,23 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_scale_1000.py --quick    # 100 VMs
     PYTHONPATH=src python benchmarks/bench_scale_1000.py --compare-reference
     PYTHONPATH=src python benchmarks/bench_scale_1000.py --mega     # + 10k-VM burst
+    PYTHONPATH=src python benchmarks/bench_scale_1000.py --giga     # + 100k-VM tier
+    PYTHONPATH=src python benchmarks/bench_scale_1000.py --profile  # cProfile run
 
 ``--compare-reference`` also times the old full-recompute engine on a
 scaled-down wave (it is quadratic — full size would take hours) so the
 speedup of the incremental engine is recorded alongside the results.
+
+Every tier is run on both the incremental and the vectorized engine
+(``SimConfig.engine``) and the JSON records one result block per engine —
+the events/s trajectory the README's engine table quotes.  ``--giga``
+appends the 100k-VM / 1M-container burst-train tier
+(``repro.sim.scale.giga_burst_config``), vector-only: the incremental
+engine takes that tier at ~20k events/s, so it is benchmarked at the mega
+tier and the giga block records the vector speedup against it.
+``--profile`` wraps the main run in cProfile and prints the top-15
+cumulative hotspots so engine regressions are diagnosable without ad-hoc
+scripts.
 
 Every run additionally records a control-plane microbenchmark: building one
 10,000-node FunctionTree via ``FTManager.bulk_insert`` (``ft_build_s``),
@@ -35,6 +48,7 @@ import time
 
 def _result_dict(cfg, res) -> dict:
     return {
+        "engine": res.engine,
         "n_vms": cfg.n_vms,
         "n_functions": cfg.n_functions,
         "containers_per_function": cfg.containers_per_function,
@@ -130,6 +144,27 @@ def _time_reference(cfg) -> dict:
     return {"wall_s": time.perf_counter() - t0, "makespan_s": sim.now}
 
 
+def _run_vector_twin(cfg, base, run_scale) -> dict:
+    """Re-run a tier with ``engine="vector"`` and record the comparison."""
+    import dataclasses
+
+    vcfg = dataclasses.replace(
+        cfg, wave=dataclasses.replace(cfg.wave, engine="vector")
+    )
+    t0 = time.perf_counter()
+    vres = run_scale(vcfg)
+    d = _result_dict(vcfg, vres)
+    d["total_wall_s"] = time.perf_counter() - t0
+    d["matches_incremental"] = (
+        vres.makespan == base.makespan
+        and vres.peak_registry_egress == base.peak_registry_egress
+    )
+    d["speedup_vs_incremental"] = (
+        base.wall_s / vres.wall_s if vres.wall_s > 0 else float("inf")
+    )
+    return d
+
+
 def main() -> None:
     from repro.sim.scale import ScaleConfig, run_scale
 
@@ -146,6 +181,16 @@ def main() -> None:
         action="store_true",
         help="also run the 10k-VM / 25-function / 100k-container mega-burst",
     )
+    ap.add_argument(
+        "--giga",
+        action="store_true",
+        help="also run the 100k-VM / 1M-container burst train (vector engine)",
+    )
+    ap.add_argument(
+        "--profile",
+        action="store_true",
+        help="wrap the main run in cProfile and print the top-15 hotspots",
+    )
     ap.add_argument("--out", default="BENCH_scale.json")
     args = ap.parse_args()
 
@@ -159,12 +204,24 @@ def main() -> None:
         churn_ops=args.churn,
         seed=args.seed,
     )
+    profiler = None
+    if args.profile:
+        import cProfile
+
+        profiler = cProfile.Profile()
+        profiler.enable()
     t0 = time.perf_counter()
     res = run_scale(cfg)
     total_wall = time.perf_counter() - t0
+    if profiler is not None:
+        import pstats
+
+        profiler.disable()
+        pstats.Stats(profiler).sort_stats("cumulative").print_stats(15)
     out = _result_dict(cfg, res)
     out["total_wall_s"] = total_wall
     out["paper_reference_s"] = 8.3  # §4.2: 2500 containers / 1000 VMs
+    out["vector"] = _run_vector_twin(cfg, res, run_scale)
 
     micro = _control_plane_micro()
     out["control_plane_micro"] = micro
@@ -179,7 +236,24 @@ def main() -> None:
         mwall = time.perf_counter() - t0
         mega = _result_dict(mcfg, mres)
         mega["total_wall_s"] = mwall
+        mega["vector"] = _run_vector_twin(mcfg, mres, run_scale)
         out["mega_burst"] = mega
+
+    if args.giga:
+        from repro.sim.scale import giga_burst_config
+
+        gcfg = giga_burst_config(seed=args.seed)
+        t0 = time.perf_counter()
+        gres = run_scale(gcfg)
+        gwall = time.perf_counter() - t0
+        giga = _result_dict(gcfg, gres)
+        giga["total_wall_s"] = gwall
+        mega_inc = out.get("mega_burst")
+        if mega_inc:
+            giga["speedup_vs_mega_incremental"] = (
+                gres.events_per_s / mega_inc["events_per_s"]
+            )
+        out["giga_burst"] = giga
 
     if args.compare_reference:
         ref_cfg = ScaleConfig(
@@ -210,6 +284,12 @@ def main() -> None:
         f"({res.events_per_s:,.0f} ev/s), peak registry egress "
         f"{res.peak_registry_egress * 8 / 1e9:.2f} Gbps -> {args.out}"
     )
+    v = out["vector"]
+    print(
+        f"vector engine: {v['events_per_s']:,.0f} ev/s "
+        f"({v['speedup_vs_incremental']:.1f}x incremental, "
+        f"match={v['matches_incremental']})"
+    )
     print(
         f"control plane: 10k-node FT build {micro['ft_build_s']*1e3:.1f} ms, "
         f"churn op {micro['churn_op_latency_s']*1e6:.1f} us, "
@@ -220,7 +300,22 @@ def main() -> None:
         print(
             f"mega burst: {m['n_containers']} containers / {m['n_vms']} VMs "
             f"in {m['total_wall_s']:.1f} s wall (build {m['control_plane_build_s']:.2f} s, "
-            f"engine {m['wall_s']:.2f} s), fetch makespan {m['fetch_makespan_s']:.2f} s"
+            f"engine {m['wall_s']:.2f} s), fetch makespan {m['fetch_makespan_s']:.2f} s; "
+            f"vector {m['vector']['events_per_s']:,.0f} ev/s "
+            f"(match={m['vector']['matches_incremental']})"
+        )
+    if args.giga:
+        g = out["giga_burst"]
+        extra = (
+            f", {g['speedup_vs_mega_incremental']:.1f}x the mega-tier "
+            f"incremental events/s"
+            if "speedup_vs_mega_incremental" in g
+            else ""
+        )
+        print(
+            f"giga burst: {g['n_containers']} containers / {g['n_vms']} VMs "
+            f"in {g['total_wall_s']:.1f} s wall (engine {g['wall_s']:.2f} s, "
+            f"{g['events_per_s']:,.0f} ev/s{extra})"
         )
 
 

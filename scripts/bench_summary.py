@@ -40,12 +40,34 @@ def summarize_scale(d: dict) -> None:
         f"{d['fetch_makespan_s']:.1f} s (paper §4.2: {d['paper_reference_s']} s), "
         f"{d['events_per_s']:,.0f} events/s, FT build {d['ft_build_s']*1e3:.0f} ms"
     )
+    vec = d.get("vector")
+    if vec:
+        print(
+            f"  vector engine: {vec['events_per_s']:,.0f} events/s "
+            f"({vec['speedup_vs_incremental']:.1f}x incremental, "
+            f"match={vec['matches_incremental']})"
+        )
     mega = d.get("mega_burst")
     if mega:
+        mv = mega.get("vector")
+        mv_s = (
+            f", vector {mv['events_per_s']:,.0f} events/s" if mv else ""
+        )
         print(
             f"  mega-burst {mega['n_vms']} VMs / {mega['n_containers']} "
             f"containers: {mega['total_wall_s']:.1f} s wall, control-plane "
-            f"build {mega['control_plane_build_s']:.1f} s"
+            f"build {mega['control_plane_build_s']:.1f} s, "
+            f"{mega['events_per_s']:,.0f} events/s{mv_s}"
+        )
+    giga = d.get("giga_burst")
+    if giga:
+        sp = giga.get("speedup_vs_mega_incremental")
+        sp_s = f" ({sp:.1f}x mega-tier incremental)" if sp else ""
+        print(
+            f"  giga-burst {giga['n_vms']} VMs / {giga['n_containers']} "
+            f"containers [{giga.get('engine', 'vector')}]: "
+            f"{giga['total_wall_s']:.1f} s wall, engine {giga['wall_s']:.1f} s, "
+            f"{giga['events_per_s']:,.0f} events/s{sp_s}"
         )
 
 

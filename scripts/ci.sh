@@ -217,4 +217,50 @@ print(
 )
 PY
 
+# Vector-engine smoke: the vectorized backend must stay bit-identical to
+# the incremental engine — a 128-VM wave across all five systems and a
+# paper-shape burst (1000 VMs, 5 fns x 500 containers) compare equal on
+# latencies, event logs, and peak-egress telemetry — and must hold an
+# events/s floor (measured ~84k on an idle dev box; 20k tolerates a loaded
+# CI host but still catches an order-of-magnitude engine regression).
+python - <<'PY'
+import time
+from repro.sim import SYSTEMS, ScaleConfig, WaveConfig, provision_wave, run_scale
+
+t0 = time.perf_counter()
+for system in SYSTEMS:
+    a = provision_wave(system, 128, WaveConfig())
+    b = provision_wave(system, 128, WaveConfig(engine="vector"))
+    assert a == b, (
+        f"vector smoke FAILED: engine divergence on the 128-VM {system} wave"
+    )
+
+res = {}
+for eng in ("incremental", "vector"):
+    cfg = ScaleConfig(churn_ops=20, seed=3, wave=WaveConfig(engine=eng))
+    res[eng] = run_scale(cfg)
+inc, vec = res["incremental"], res["vector"]
+assert vec.trace == inc.trace, (
+    "vector smoke FAILED: burst event logs diverge between engines"
+)
+assert vec.peak_registry_egress == inc.peak_registry_egress
+assert vec.peak_shard_egress == inc.peak_shard_egress
+elapsed = time.perf_counter() - t0
+floor = 20_000.0
+assert vec.events_per_s >= floor, (
+    f"vector smoke FAILED: {vec.events_per_s:,.0f} events/s on the "
+    f"paper-shape burst (floor {floor:,.0f}) — the vector engine has "
+    f"regressed an order of magnitude"
+)
+budget = 10.0
+assert elapsed < budget, (
+    f"vector smoke FAILED: took {elapsed:.2f} s (budget {budget} s)"
+)
+print(
+    f"vector smoke ok: 128-VM waves + paper burst bit-identical, "
+    f"{vec.events_per_s:,.0f} events/s (incremental "
+    f"{inc.events_per_s:,.0f}), in {elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

@@ -8,7 +8,7 @@ from repro.core.reclaim import (
 from repro.core.registry import RegistrySpec, ShardResolver
 
 from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
-from .engine import GBPS, FlowSim, NICConfig, SimConfig
+from .engine import ENGINES, GBPS, FlowSim, NICConfig, SimConfig, make_sim
 from .multi_tenant import (
     PLACEMENTS,
     MultiTenantConfig,
@@ -23,11 +23,13 @@ from .reference import ReferenceFlowSim
 from .scale import (
     ScaleConfig,
     ScaleResult,
+    giga_burst_config,
     mega_burst_config,
     multi_tenant_config,
     run_scale,
     serving_config,
 )
+from .vector_engine import VectorFlowSim
 from .traces import (
     constant_trace,
     diurnal_trace,
@@ -50,9 +52,12 @@ __all__ = [
     "scalability_table",
     "startup_timeline",
     "GBPS",
+    "ENGINES",
     "FlowSim",
+    "VectorFlowSim",
     "NICConfig",
     "SimConfig",
+    "make_sim",
     "MultiTenantConfig",
     "MultiTenantReplay",
     "MultiTenantResult",
@@ -63,6 +68,7 @@ __all__ = [
     "ReferenceFlowSim",
     "ScaleConfig",
     "ScaleResult",
+    "giga_burst_config",
     "mega_burst_config",
     "multi_tenant_config",
     "run_scale",

@@ -20,7 +20,7 @@ from repro.core.topology import (
     on_demand_plan,
 )
 
-from .engine import GBPS, FlowSim, SimConfig
+from .engine import GBPS, SimConfig, make_sim
 
 MB = 1e6
 
@@ -58,6 +58,11 @@ class WaveConfig:
     kraken_coord_s: float = 0.070  # origin CPU per (node, layer) announce
     dadi_coord_s: float = 0.160  # DADI root CPU per joining node
     seed: int = 0
+    # Engine backend for the wave's FlowSim ("incremental" | "vector" |
+    # "reference") and whether it keeps the per-event text log; threaded
+    # into SimConfig by every wave/replay entry point.
+    engine: str = "incremental"
+    record_trace: bool = True
 
     def registry_spec(self) -> RegistrySpec:
         return RegistrySpec.resolve(
@@ -93,12 +98,14 @@ def provision_wave(
     )
     spec = cfg.registry_spec()
     resolver = ShardResolver(spec)  # one resolver per wave: stateful policies
-    sim = FlowSim(
+    sim = make_sim(
         SimConfig(
             registry=spec,
             per_stream_cap=cfg.per_stream_cap,
             hop_latency=cfg.hop_latency,
             coordinator_cost_s=coord_cost,
+            engine=cfg.engine,
+            record_trace=cfg.record_trace,
         )
     )
     for vm, cap in (slow_vms or {}).items():

@@ -59,10 +59,21 @@ from repro.core.topology import DistributionPlan, Flow
 
 __all__ = [
     "GBPS",  # canonical home of the shared bytes/s constant
+    "ENGINES",
     "NICConfig",
     "SimConfig",
     "FlowSim",
+    "make_sim",
+    "plan_releases",
 ]
+
+#: Engine backends selectable via :attr:`SimConfig.engine`.  They form an
+#: oracle chain — ``reference`` (full recompute, trivially correct) polices
+#: ``incremental`` (per-NIC dirty sets), which in turn polices ``vector``
+#: (flat numpy arrays) — and all three are differential-tested to produce
+#: bit-identical event logs and rates within 1e-9 (``tests/test_scale.py``,
+#: ``tests/test_vector_engine.py``).
+ENGINES = ("incremental", "vector", "reference")
 
 
 @dataclass
@@ -90,12 +101,72 @@ class SimConfig:
     # knobs above, which keeps every pre-sharding configuration bit-exact;
     # a multi-shard spec makes each shard an independent capped source.
     registry: Optional[RegistrySpec] = None
+    # Engine backend: "incremental" (default), "vector" (flat numpy arrays,
+    # the 100k-VM backend) or "reference" (full-recompute oracle).  All
+    # three produce identical results; see ``make_sim``.
+    engine: str = "incremental"
+    # Large fleets can drop the per-event text log (the giga-burst tier
+    # would otherwise materialize millions of trace tuples).
+    record_trace: bool = True
 
     def registry_spec(self) -> RegistrySpec:
         """The effective spec (legacy knobs become a 1-shard registry)."""
         return RegistrySpec.resolve(
             self.registry, egress_cap=self.registry_out_cap, qps=self.registry_qps
         )
+
+
+def plan_releases(
+    plan: DistributionPlan,
+    cfg: SimConfig,
+    t0: float,
+    coordinator_queues: dict[str, float],
+) -> list[tuple[Flow, float, bool]]:
+    """Shared plan → flow-schedule lowering used by every engine backend.
+
+    For each flow of ``plan`` compute its control-plane release time (plan
+    control latency plus, where a coordinator is named, serialization on
+    that coordinator's CPU queue — mutated in ``coordinator_queues`` so the
+    queue carries across plans) and whether it fetches block-granular from
+    the registry (``block_mode``).  Returns ``(flow, release, block_mode)``
+    in plan order.  Extracted from the per-engine ``add_plan`` bodies so the
+    three backends cannot drift on release semantics.
+    """
+    out: list[tuple[Flow, float, bool]] = []
+    for fl in plan.flows:
+        release = t0 + plan.control_latency.get(fl.dst, 0.0)
+        # Coordinator serialization: each request queues on the root's CPU.
+        coord = plan.coordinator.get(fl.dst)
+        if coord is not None:
+            q = max(coordinator_queues.get(coord, t0), release)
+            release = q + cfg.coordinator_cost_s
+            coordinator_queues[coord] = release
+        out.append((fl, release, plan.streaming and is_registry_node(fl.src)))
+    return out
+
+
+def make_sim(cfg: SimConfig | None = None, *, record_rates: bool = False):
+    """Build the flow simulator selected by ``cfg.engine``.
+
+    The default ("incremental") is :class:`FlowSim`; "vector" selects the
+    array-based :class:`repro.sim.vector_engine.VectorFlowSim` backend and
+    "reference" the full-recompute oracle.  All three share ``SimConfig``
+    and the public API, and produce identical results on the same inputs.
+    """
+    cfg = cfg or SimConfig()
+    if cfg.engine == "incremental":
+        return FlowSim(cfg, record_rates=record_rates)
+    if cfg.engine == "vector":
+        from .vector_engine import VectorFlowSim
+
+        return VectorFlowSim(cfg, record_rates=record_rates)
+    if cfg.engine == "reference":
+        from .reference import ReferenceFlowSim
+
+        return ReferenceFlowSim(cfg, record_rates=record_rates)
+    raise ValueError(
+        f"unknown engine {cfg.engine!r}; expected one of {ENGINES}"
+    )
 
 
 @dataclass(eq=False)
@@ -138,7 +209,9 @@ class FlowSim:
         self._out: dict[str, dict[int, _FlowState]] = {}  # node -> active out flows
         self._in: dict[str, dict[int, _FlowState]] = {}  # node -> active in flows
         self._done_heap: list[tuple[float, int, int]] = []  # (t_finish, fid, epoch)
+        self._n_active = 0  # started-and-not-done flows (heap compaction bound)
         self._pending_dirty: dict[int, _FlowState] = {}
+        self._record_trace = self.cfg.record_trace
         # Telemetry -------------------------------------------------------------
         self.events_processed = 0
         self.record_rates = record_rates
@@ -224,17 +297,9 @@ class FlowSim:
         coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
         by_dst: dict[str, _FlowState] = {}
         states: list[_FlowState] = []
-        for fl in plan.flows:
-            release = t0 + plan.control_latency.get(fl.dst, 0.0)
-            # Coordinator serialization: each request queues on the root's CPU.
-            coord = plan.coordinator.get(fl.dst)
-            if coord is not None:
-                q = max(coordinator_queues.get(coord, t0), release)
-                release = q + cfg.coordinator_cost_s
-                coordinator_queues[coord] = release
+        for fl, release, block_mode in plan_releases(plan, cfg, t0, coordinator_queues):
             st = _FlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
-                            start_after=release,
-                            block_mode=plan.streaming and is_registry_node(fl.src))
+                            start_after=release, block_mode=block_mode)
             states.append(st)
             # streaming dependency: dst of the parent flow == src of this flow
             by_dst.setdefault(fl.dst, st)
@@ -278,11 +343,13 @@ class FlowSim:
         st.started = True
         st.t_start = self.now
         st.t_last = self.now
+        self._n_active += 1
         f = st.flow
         skey = self._src_key(f.src)
         self._out.setdefault(skey, {})[st.fid] = st
         self._in.setdefault(f.dst, {})[st.fid] = st
-        self.trace.append((self.now, f"start#{st.fid} {f.src}->{f.dst}/{f.piece}"))
+        if self._record_trace:
+            self.trace.append((self.now, f"start#{st.fid} {f.src}->{f.dst}/{f.piece}"))
         # Counts on both NICs changed: every flow sharing them is dirty.
         for g in self._out[skey].values():
             self._pending_dirty[g.fid] = g
@@ -385,8 +452,28 @@ class FlowSim:
                 if u > self.peak_nic_utilization:
                     self.peak_nic_utilization = u
 
+    # Compact ``_done_heap`` when stale (epoch-superseded or completed)
+    # entries outnumber live flows ~4x.  Every rate change pushes a fresh
+    # entry and only invalidates the old one lazily, so rate-churny runs
+    # (straggler toggling, large shared-NIC fan-in) would otherwise grow the
+    # heap without bound; the rebuild keeps only current-epoch entries of
+    # active flows and re-heapifies — pop order is unchanged because stale
+    # entries were never returned anyway.
+    _HEAP_COMPACT_MIN = 64
+
+    def _compact_done_heap(self) -> None:
+        heap = [
+            e
+            for e in self._done_heap
+            if not (f := self._flows[e[1]]).done and f.started and e[2] == f.epoch
+        ]
+        heapq.heapify(heap)
+        self._done_heap = heap
+
     def _next_completion(self) -> float:
         """Earliest valid completion time (lazily dropping stale heap entries)."""
+        if len(self._done_heap) > max(self._HEAP_COMPACT_MIN, 4 * self._n_active):
+            self._compact_done_heap()
         while self._done_heap:
             t, fid, epoch = self._done_heap[0]
             f = self._flows[fid]
@@ -402,6 +489,7 @@ class FlowSim:
         f.remaining = 0.0
         f.t_done = self.now
         f.t_last = self.now
+        self._n_active -= 1
         skey = self._src_key(fl.src)
         del self._out[skey][f.fid]
         del self._in[fl.dst][f.fid]
@@ -411,7 +499,8 @@ class FlowSim:
             self._vm_out[skey] = self._vm_out.get(skey, 0.0) - f.rate
         self._vm_in[fl.dst] = self._vm_in.get(fl.dst, 0.0) - f.rate
         self.events_processed += 1
-        self.trace.append((self.now, f"done#{f.fid} {fl.src}->{fl.dst}/{fl.piece}"))
+        if self._record_trace:
+            self.trace.append((self.now, f"done#{f.fid} {fl.src}->{fl.dst}/{fl.piece}"))
         # Freed shares on both NICs + the lifted parent-cap on children.
         for g in self._out[skey].values():
             self._pending_dirty[g.fid] = g

@@ -83,7 +83,7 @@ from repro.core.registry import RegistrySpec, ShardResolver, is_registry_node
 from repro.core.topology import DistributionPlan, Flow
 
 from .cluster import WaveConfig
-from .engine import GBPS, FlowSim, SimConfig
+from .engine import GBPS, SimConfig, make_sim
 from .traces import arrival_offsets, arrivals_for_second
 
 
@@ -327,11 +327,13 @@ class MultiTenantReplay:
                 )
         self.cfg = cfg
         spec = cfg.registry_spec()
-        self.sim = FlowSim(
+        self.sim = make_sim(
             SimConfig(
                 registry=spec,
                 per_stream_cap=w.per_stream_cap,
                 hop_latency=w.hop_latency,
+                engine=w.engine,
+                record_trace=w.record_trace,
             )
         )
         # Shard assignment is scheduler state (it rides the failover snapshot

@@ -26,7 +26,7 @@ from typing import Callable, Optional
 from repro.core.registry import is_registry_node, shard_index
 from repro.core.topology import DistributionPlan, Flow
 
-from .engine import SimConfig
+from .engine import SimConfig, plan_releases
 
 
 @dataclass(eq=False)
@@ -95,17 +95,9 @@ class ReferenceFlowSim:
         coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
         by_dst: dict[str, _RefFlowState] = {}
         states: list[_RefFlowState] = []
-        for fl in plan.flows:
-            release = t0 + plan.control_latency.get(fl.dst, 0.0)
-            # Coordinator serialization: each request queues on the root's CPU.
-            coord = plan.coordinator.get(fl.dst)
-            if coord is not None:
-                q = max(coordinator_queues.get(coord, t0), release)
-                release = q + cfg.coordinator_cost_s
-                coordinator_queues[coord] = release
+        for fl, release, block_mode in plan_releases(plan, cfg, t0, coordinator_queues):
             st = _RefFlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
-                               start_after=release,
-                               block_mode=plan.streaming and is_registry_node(fl.src))
+                               start_after=release, block_mode=block_mode)
             states.append(st)
             # streaming dependency: dst of the parent flow == src of this flow
             by_dst.setdefault(fl.dst, st)

@@ -1,0 +1,940 @@
+"""Vectorized array-based fluid-flow engine (the 100k-VM backend).
+
+Third member of the engine oracle chain (``reference`` → ``incremental`` →
+``vector``): the same rate model and event semantics as
+:class:`repro.sim.engine.FlowSim`, but live flows are flat numpy arrays —
+src-node index, dst-node index, streaming depth, parent index, remaining
+bytes, rate, last-settle time, epoch — instead of per-flow Python objects
+chained through dict registries.  The incremental engine's per-flow
+``(depth, fid)`` heap walk becomes vectorized passes:
+
+* per-node active-flow counts are maintained as int arrays (the bincount of
+  the per-NIC registries), so the equal-split denominators come from two
+  gathers;
+* the out-cap / in-cap / per-stream / decompress / QPS-throttle minimum is
+  one elementwise ``np.minimum`` chain over the dirty candidates;
+* parent-chain rate propagation is a bounded depth-sweep: candidates are
+  grouped by cached streaming depth and processed shallow-to-deep
+  (fid-ascending within a level), so a level's parent rates are final
+  before its children read them — the exact global ``(depth, fid)`` order
+  of the incremental engine's worklist heap;
+* completion times are batch-computed as ``t_last + remaining / rate`` over
+  the changed slice and fed to the same lazily-invalidated epoch heap, with
+  all same-timestamp completions extracted in one batch.
+
+Determinism and bit-identity: every arithmetic step mirrors the incremental
+engine's operand order (IEEE-754 double ops on the same operands give the
+same bits whether they come from a Python float or a float64 array), event
+and completion ordering reuse the same ``(time, seq)`` / ``(t, fid)``
+tie-breaks, and per-shard registry egress is accumulated per-flow in the
+same ``(depth, fid)`` order so the running sums — not just the results —
+match.  The differential suite (``tests/test_vector_engine.py``) pins event
+logs SHA-identical and rates to 1e-9 against both other engines.
+
+Trace strings are materialized lazily (the raw log stores ``(t, kind,
+fid)`` tuples) so the hot loop never formats text; ``sim.trace`` renders
+the identical strings on first access.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.registry import is_registry_node, shard_index
+from repro.core.topology import DistributionPlan, Flow
+
+from .engine import SimConfig, plan_releases
+
+__all__ = ["VectorFlowSim"]
+
+_F64 = np.float64
+_I64 = np.int64
+
+
+class _VFlowState:
+    """Per-flow handle exposing the FlowSim flow-state API over the arrays.
+
+    Scheduling topology (parent / children / waiters) and lifecycle flags
+    stay on the object — they drive Python-side event wiring — while the
+    numeric hot fields (``remaining`` / ``rate`` / ``t_last`` / ``epoch``)
+    live only in the engine arrays and are exposed as read-only properties.
+    """
+
+    __slots__ = (
+        "flow", "total", "start_after", "block_mode", "pipeline_delay",
+        "on_done", "parent", "children", "waiters", "started", "done",
+        "t_start", "t_done", "depth", "fid", "_eng",
+    )
+
+    def __init__(self, flow: Flow, total: float, start_after: float,
+                 block_mode: bool, eng: "VectorFlowSim") -> None:
+        self.flow = flow
+        self.total = total
+        self.start_after = start_after
+        self.block_mode = block_mode
+        self.pipeline_delay = 0.0
+        self.on_done: Optional[Callable[[float], None]] = None
+        self.parent: Optional["_VFlowState"] = None
+        self.children: list["_VFlowState"] = []
+        self.waiters: list["_VFlowState"] = []
+        self.started = False
+        self.done = False
+        self.t_start = math.inf
+        self.t_done = math.inf
+        self.depth = 0
+        self.fid = -1
+        self._eng = eng
+
+    @property
+    def remaining(self) -> float:
+        return float(self._eng._rem[self.fid])
+
+    @property
+    def rate(self) -> float:
+        return float(self._eng._rate[self.fid])
+
+    @property
+    def t_last(self) -> float:
+        return float(self._eng._tlast[self.fid])
+
+    @property
+    def epoch(self) -> int:
+        return int(self._eng._epoch[self.fid])
+
+
+def _grown(arr: np.ndarray, cap: int) -> np.ndarray:
+    out = np.zeros(cap, dtype=arr.dtype)
+    out[: len(arr)] = arr
+    return out
+
+
+class VectorFlowSim:
+    """Array-based engine; drop-in for FlowSim via ``SimConfig.engine``."""
+
+    def __init__(self, cfg: SimConfig | None = None, *, record_rates: bool = False) -> None:
+        self.cfg = cfg or SimConfig()
+        self.registry = self.cfg.registry_spec()
+        self.now = 0.0
+        self._flows: list[_VFlowState] = []  # index == fid
+        self._seq = 0
+        # Event queue (payloads are fids or callables).  ``schedule`` only
+        # appends to ``_ev_pending``; bulk-scheduled events are folded into a
+        # (t, seq)-sorted snapshot consumed by index (``_sptr``) so the run
+        # loop never heappops a million-entry heap, while events scheduled
+        # mid-run drain into a small heap merged with the snapshot head.
+        self._ev_pending: list[tuple[float, int, object]] = []
+        self._ev_heap: list[tuple[float, int, object]] = []
+        self._sts: list[float] = []  # snapshot times
+        self._sseq: list[int] = []  # snapshot sequence numbers
+        self._spay: list[object] = []  # snapshot payloads
+        self._sptr = 0
+        self._in_run = False
+        self._slow_out: dict[str, float] = {}  # vm_id -> out cap override
+        self._record_trace = self.cfg.record_trace
+        self._trace_raw: list[tuple[float, int, int]] = []  # (t, 1=start/0=done, fid)
+        self._trace_cache: list[tuple[float, str]] = []
+        # Flow arrays (capacity-doubled; rows live at index == fid) ------------
+        cap = 1024
+        self._fcap = cap
+        self._fsrc = np.zeros(cap, dtype=_I64)  # node index of (canonical) src
+        self._fdst = np.zeros(cap, dtype=_I64)
+        self._fdep = np.zeros(cap, dtype=_I64)  # cached streaming depth
+        self._fpar = np.full(cap, -1, dtype=_I64)  # parent fid or -1
+        self._fblk = np.zeros(cap, dtype=bool)  # block-granular registry fetch
+        self._rem = np.zeros(cap, dtype=_F64)
+        self._rate = np.zeros(cap, dtype=_F64)
+        self._tlast = np.zeros(cap, dtype=_F64)
+        self._epoch = np.zeros(cap, dtype=_I64)
+        self._fstarted = np.zeros(cap, dtype=bool)
+        self._fdone = np.zeros(cap, dtype=bool)
+        # Node arrays ----------------------------------------------------------
+        ncap = 256
+        self._ncap = ncap
+        self._node_id: dict[str, int] = {}
+        self._nname: list[str] = []
+        self._nout_cnt = np.zeros(ncap, dtype=_I64)  # active out flows per node
+        self._nin_cnt = np.zeros(ncap, dtype=_I64)
+        self._nout_cap = np.zeros(ncap, dtype=_F64)  # egress cap (slow-VM aware)
+        self._nqps = np.zeros(ncap, dtype=_F64)
+        self._nreg = np.zeros(ncap, dtype=bool)  # node is a registry shard
+        self._nout_fids: list[set[int]] = []  # node -> active out fids
+        self._nin_fids: list[set[int]] = []
+        self._vm_out = np.zeros(ncap, dtype=_F64)  # running out-rate sums
+        self._vm_in = np.zeros(ncap, dtype=_F64)
+        # Completion heap + dirty state ---------------------------------------
+        self._done_heap: list[tuple[float, int, int]] = []  # (t_finish, fid, epoch)
+        self._n_active = 0
+        self._dirty_nodes: set[int] = set()
+        self._dirty_fids: set[int] = set()
+        # Telemetry ------------------------------------------------------------
+        self.events_processed = 0
+        self.record_rates = record_rates
+        self.rate_log: list[tuple[float, int, float]] = []  # (t, fid, new_rate)
+        self._reg_out: dict[str, float] = {}  # shard key -> running egress sum
+        self.peak_shard_egress: dict[str, float] = {}
+        self.peak_registry_egress = 0.0
+        self.peak_nic_utilization = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def trace(self) -> list[tuple[float, str]]:
+        """The (time, event) log, rendered lazily from the raw tuples."""
+        raw, cache = self._trace_raw, self._trace_cache
+        if len(cache) < len(raw):
+            flows = self._flows
+            for t, kind, fid in raw[len(cache):]:
+                f = flows[fid].flow
+                word = "start" if kind else "done"
+                cache.append((t, f"{word}#{fid} {f.src}->{f.dst}/{f.piece}"))
+        return cache
+
+    # ------------------------------------------------------------------
+    def _grow_flows(self, need: int) -> None:
+        if need <= self._fcap:
+            return
+        cap = max(need, self._fcap * 2)
+        self._fcap = cap
+        self._fsrc = _grown(self._fsrc, cap)
+        self._fdst = _grown(self._fdst, cap)
+        self._fdep = _grown(self._fdep, cap)
+        par = np.full(cap, -1, dtype=_I64)
+        par[: len(self._fpar)] = self._fpar
+        self._fpar = par
+        self._fblk = _grown(self._fblk, cap)
+        self._rem = _grown(self._rem, cap)
+        self._rate = _grown(self._rate, cap)
+        self._tlast = _grown(self._tlast, cap)
+        self._epoch = _grown(self._epoch, cap)
+        self._fstarted = _grown(self._fstarted, cap)
+        self._fdone = _grown(self._fdone, cap)
+
+    def _grow_nodes(self, need: int) -> None:
+        if need <= self._ncap:
+            return
+        cap = max(need, self._ncap * 2)
+        self._ncap = cap
+        self._nout_cnt = _grown(self._nout_cnt, cap)
+        self._nin_cnt = _grown(self._nin_cnt, cap)
+        self._nout_cap = _grown(self._nout_cap, cap)
+        self._nqps = _grown(self._nqps, cap)
+        self._nreg = _grown(self._nreg, cap)
+        self._vm_out = _grown(self._vm_out, cap)
+        self._vm_in = _grown(self._vm_in, cap)
+
+    def _node_idx(self, name: str) -> int:
+        """Dense node index; registry names must already be canonical."""
+        i = self._node_id.get(name)
+        if i is not None:
+            return i
+        i = len(self._nname)
+        self._grow_nodes(i + 1)
+        self._node_id[name] = i
+        self._nname.append(name)
+        self._nout_fids.append(set())
+        self._nin_fids.append(set())
+        if is_registry_node(name):
+            shard = shard_index(name)
+            self._nout_cap[i] = self.registry.egress_of(shard)
+            self._nqps[i] = self.registry.qps_of(shard)
+            self._nreg[i] = True
+        else:
+            self._nout_cap[i] = self._slow_out.get(name, self.cfg.vm_nic.out_cap)
+            self._nqps[i] = math.inf
+        return i
+
+    # ------------------------------------------------------------------
+    def set_slow_vm(self, vm_id: str, out_cap: float) -> None:
+        """Straggler injection: clamp a VM's egress capacity."""
+        self._slow_out[vm_id] = out_cap
+        i = self._node_id.get(vm_id)
+        if i is not None and not self._nreg[i]:
+            self._nout_cap[i] = out_cap
+            if self._nout_fids[i]:
+                self._dirty_nodes.add(i)
+
+    def clear_slow_vm(self, vm_id: str) -> None:
+        self._slow_out.pop(vm_id, None)
+        i = self._node_id.get(vm_id)
+        if i is not None and not self._nreg[i]:
+            self._nout_cap[i] = self.cfg.vm_nic.out_cap
+            if self._nout_fids[i]:
+                self._dirty_nodes.add(i)
+
+    def schedule(self, t: float, fn) -> None:
+        """Queue a timed event; ``fn`` is a callable or an internal fid."""
+        self._seq += 1
+        self._ev_pending.append((t, self._seq, fn))
+
+    def _fold_events(self) -> None:
+        """Merge all outstanding events into one (t, seq)-sorted snapshot.
+
+        Pops then cost a list-index bump instead of an O(log n) sift on a
+        heap the size of the whole burst.  The (t, seq) key is the exact
+        tuple order ``heapq`` would impose (seq is unique), so the global
+        event order is bit-identical to the incremental engine's heap.
+        """
+        evs: list[tuple[float, int, object]] = []
+        p = self._sptr
+        if p < len(self._spay):
+            evs.extend(zip(self._sts[p:], self._sseq[p:], self._spay[p:]))
+        evs.extend(self._ev_heap)
+        evs.extend(self._ev_pending)
+        del self._ev_heap[:]
+        del self._ev_pending[:]
+        if not evs:
+            self._sts, self._sseq, self._spay, self._sptr = [], [], [], 0
+            return
+        n = len(evs)
+        ts = np.fromiter((e[0] for e in evs), dtype=_F64, count=n)
+        seqs = np.fromiter((e[1] for e in evs), dtype=_I64, count=n)
+        order = np.lexsort((seqs, ts))
+        self._sts = ts[order].tolist()
+        self._sseq = seqs[order].tolist()
+        self._spay = [evs[i][2] for i in order.tolist()]
+        self._sptr = 0
+
+    def set_parent(self, st: _VFlowState, parent: Optional[_VFlowState]) -> None:
+        """Attach a streaming dependency (see FlowSim.set_parent)."""
+        if st.parent is not None:
+            try:
+                st.parent.children.remove(st)
+            except ValueError:  # pragma: no cover - defensive
+                pass
+        st.parent = parent
+        if parent is not None:
+            parent.children.append(st)
+        st.depth = parent.depth + 1 if parent is not None else 0
+        if st.fid >= 0:
+            self._fpar[st.fid] = parent.fid if parent is not None else -1
+            self._fdep[st.fid] = st.depth
+        stack = list(st.children)
+        while stack:
+            c = stack.pop()
+            c.depth = c.parent.depth + 1
+            if c.fid >= 0:
+                self._fdep[c.fid] = c.depth
+            stack.extend(c.children)
+        if st.started and not st.done:
+            # attaching mid-flight changes the parent-rate cap immediately
+            self._dirty_fids.add(st.fid)
+
+    # ------------------------------------------------------------------
+    def add_plan(
+        self,
+        plan: DistributionPlan,
+        *,
+        t0: float = 0.0,
+        on_node_done: Optional[Callable[[str, float], None]] = None,
+        coordinator_queues: Optional[dict[str, float]] = None,
+    ) -> list[_VFlowState]:
+        """Register a provisioning wave starting at ``t0``."""
+        cfg = self.cfg
+        coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
+        by_dst: dict[str, _VFlowState] = {}
+        states: list[_VFlowState] = []
+        for fl, release, block_mode in plan_releases(plan, cfg, t0, coordinator_queues):
+            st = _VFlowState(fl, float(fl.bytes), release, block_mode, self)
+            states.append(st)
+            # streaming dependency: dst of the parent flow == src of this flow
+            by_dst.setdefault(fl.dst, st)
+        if plan.streaming:
+            block_t = cfg.block_size / cfg.vm_nic.in_cap
+            for st in states:
+                up = by_dst.get(st.flow.src)
+                if up is not None:
+                    self.set_parent(st, up)
+                    st.start_after = max(st.start_after, t0)  # start gated below
+                    # child may begin one block (+hop cost) after the parent
+                    st.pipeline_delay = block_t + cfg.hop_latency
+        self._grow_flows(len(self._flows) + len(states))
+        for st in states:
+            if on_node_done is not None:
+                dst = st.flow.dst
+                st.on_done = (
+                    lambda t, dst=dst: on_node_done(dst, t)
+                )
+            fid = len(self._flows)
+            st.fid = fid
+            self._flows.append(st)
+            self._register_flow(st)
+        for st in states:
+            # parent fids are only all assigned once the loop above finishes
+            if st.parent is not None:
+                self._fpar[st.fid] = st.parent.fid
+        for st in states:
+            self._arm_start(st)
+        if not self._in_run and len(self._ev_pending) > 2048:
+            self._fold_events()  # sort bulk releases outside the timed run
+        return states
+
+    def _register_flow(self, st: _VFlowState) -> None:
+        fid = st.fid
+        fl = st.flow
+        src = fl.src
+        skey = self.registry.canonical(src) if is_registry_node(src) else src
+        self._fsrc[fid] = self._node_idx(skey)
+        self._fdst[fid] = self._node_idx(fl.dst)
+        self._fdep[fid] = st.depth
+        self._fblk[fid] = st.block_mode
+        self._rem[fid] = st.total
+
+    def _arm_start(self, st: _VFlowState) -> None:
+        if st.parent is not None and not st.parent.started:
+            # Gated on the parent's start: no polling — the parent notifies
+            # its waiters the moment it starts.
+            st.parent.waiters.append(st)
+            return
+        t = max(st.start_after, self.now)
+        if st.parent is not None:
+            t = max(t, st.parent.t_start + st.pipeline_delay)
+        self.schedule(t, st.fid)
+
+    def _flush_starts(self, fids: list[int]) -> None:
+        """Array/registry side of a batch of flows that just started.
+
+        The object-side lifecycle (``started`` flags, waiter releases) runs
+        per-flow in event order inside the run loop; everything batchable —
+        NIC counts, per-node fid sets, dirty marks, trace — lands here in
+        the same order, so the observable state matches flow-at-a-time
+        processing exactly.
+        """
+        now = self.now
+        fa = np.asarray(fids, dtype=_I64)
+        self._fstarted[fa] = True
+        self._tlast[fa] = now
+        self._n_active += len(fids)
+        sk = self._fsrc[fa]
+        dk = self._fdst[fa]
+        np.add.at(self._nout_cnt, sk, 1)
+        np.add.at(self._nin_cnt, dk, 1)
+        sk_l = sk.tolist()
+        dk_l = dk.tolist()
+        dn = self._dirty_nodes
+        nout_f, nin_f = self._nout_fids, self._nin_fids
+        for i, fid in enumerate(fids):
+            s = sk_l[i]
+            d = dk_l[i]
+            nout_f[s].add(fid)
+            nin_f[d].add(fid)
+            # Counts on both NICs changed: every flow sharing them is dirty.
+            dn.add(s)
+            dn.add(d)
+        if self._record_trace:
+            tr = self._trace_raw
+            for fid in fids:
+                tr.append((now, 1, fid))
+
+    # ------------------------------------------------------------------
+    # Vectorized rate maintenance
+    # ------------------------------------------------------------------
+    def _recompute(self) -> None:
+        """Re-rate the dirty closure as depth-level array passes."""
+        dn, df = self._dirty_nodes, self._dirty_fids
+        self._dirty_nodes, self._dirty_fids = set(), set()
+        cand: set[int] = set(df)
+        nout_f, nin_f = self._nout_fids, self._nin_fids
+        for n in dn:
+            cand.update(nout_f[n])
+            cand.update(nin_f[n])
+        if not cand:
+            return
+        arr = np.fromiter(cand, dtype=_I64, count=len(cand))
+        keep = self._fstarted[arr] & ~self._fdone[arr]
+        if not keep.all():
+            arr = arr[keep]
+        if arr.size == 0:
+            return
+        cfg = self.cfg
+        now = self.now
+        flows = self._flows
+        # Group candidates by streaming depth, fid-ascending within a level:
+        # processing levels shallow-to-deep reproduces the incremental
+        # engine's global (depth, fid) worklist order exactly.
+        deps = self._fdep[arr]
+        order = np.lexsort((arr, deps))
+        arr = arr[order]
+        deps = deps[order]
+        cuts = np.flatnonzero(np.diff(deps)) + 1
+        pending: dict[int, list[np.ndarray]] = {}
+        for d, chunk in zip(
+            deps[np.concatenate(([0], cuts))].tolist(), np.split(arr, cuts)
+        ):
+            pending[d] = [chunk]
+        touched_out: list[int] = []
+        touched_in: list[int] = []
+        while pending:
+            d = min(pending)
+            chunks = pending.pop(d)
+            fids = chunks[0] if len(chunks) == 1 else np.unique(np.concatenate(chunks))
+            act = self._fstarted[fids] & ~self._fdone[fids]
+            if not act.all():
+                fids = fids[act]
+            if fids.size == 0:
+                continue
+            if fids.size <= 64:
+                # Small level: ~40 numpy dispatches cost more than the work
+                # itself, so run the identical arithmetic as Python scalars
+                # (same operand order on the same float64 values — the bits
+                # cannot differ).
+                nc = self._scalar_level(fids, now, flows, touched_out, touched_in)
+                if nc:
+                    pending.setdefault(d + 1, []).append(
+                        np.asarray(nc, dtype=_I64)
+                    )
+                continue
+            src = self._fsrc[fids]
+            dst = self._fdst[fids]
+            n_out = self._nout_cnt[src]
+            r = np.minimum(cfg.per_stream_cap, self._nout_cap[src] / n_out)
+            np.minimum(r, cfg.vm_nic.in_cap / self._nin_cnt[dst], out=r)
+            np.minimum(r, cfg.decompress_rate, out=r)
+            blk = self._fblk[fids]
+            if blk.any():
+                # per-shard request throttle shared by the shard's streams
+                bi = np.flatnonzero(blk)
+                r[bi] = np.minimum(
+                    r[bi], cfg.block_size * self._nqps[src[bi]] / n_out[bi]
+                )
+            par = self._fpar[fids]
+            pm = par >= 0
+            if pm.any():
+                pi = np.flatnonzero(pm)
+                live = ~self._fdone[par[pi]]
+                if not live.all():
+                    pi = pi[live]
+                if pi.size:
+                    r[pi] = np.minimum(r[pi], self._rate[par[pi]])
+            changed = r != self._rate[fids]
+            if not changed.any():
+                continue
+            ci = np.flatnonzero(changed)
+            ch = fids[ci]  # fid-ascending (fids sorted)
+            r_new = r[ci]
+            old = self._rate[ch]
+            # settle under the old rate (mirror of FlowSim._settle)
+            tl = self._tlast[ch]
+            adv = now > tl
+            if adv.any():
+                ai = np.flatnonzero(adv)
+                aj = ch[ai]
+                pos = old[ai] > 0.0
+                if pos.any():
+                    ak = aj[pos]
+                    self._rem[ak] = np.maximum(
+                        0.0, self._rem[ak] - self._rate[ak] * (now - self._tlast[ak])
+                    )
+                self._tlast[aj] = now
+            delta = r_new - old
+            srcc = src[ci]
+            dstc = dst[ci]
+            isreg = self._nreg[srcc]
+            if isreg.any():
+                # per-flow dict accumulation in (depth, fid) order — the
+                # running per-shard sums must match the incremental engine
+                # bit-for-bit, so mirror its add sequence exactly
+                names = self._nname
+                reg = self._reg_out
+                dl = delta.tolist()
+                for k in np.flatnonzero(isreg).tolist():
+                    skey = names[srcc[k]]
+                    reg[skey] = reg.get(skey, 0.0) + dl[k]
+            vm = ~isreg
+            if vm.any():
+                vi = np.flatnonzero(vm)
+                np.add.at(self._vm_out, srcc[vi], delta[vi])
+                touched_out.extend(srcc[vi].tolist())
+            np.add.at(self._vm_in, dstc, delta)
+            touched_in.extend(dstc.tolist())
+            self._rate[ch] = r_new
+            self._epoch[ch] += 1
+            pos_r = r_new > 0.0
+            est = np.zeros(ch.size, dtype=_F64)
+            if pos_r.any():
+                pj = np.flatnonzero(pos_r)
+                est[pj] = self._tlast[ch[pj]] + self._rem[ch[pj]] / r_new[pj]
+            ch_l = ch.tolist()
+            ep_l = self._epoch[ch].tolist()
+            entries = [
+                (t, fid, e)
+                for t, fid, e, p in zip(est.tolist(), ch_l, ep_l, pos_r.tolist())
+                if p
+            ]
+            # A parent-rate change propagates down the streaming chain.
+            next_chunk: list[int] = []
+            for fid in ch_l:
+                for c in flows[fid].children:
+                    if c.started and not c.done:
+                        next_chunk.append(c.fid)
+            if self.record_rates:
+                rl = self.rate_log
+                for fid, rn in zip(ch_l, r_new.tolist()):
+                    rl.append((now, fid, rn))
+            if entries:
+                heap = self._done_heap
+                if len(entries) > 1024 and 2 * len(entries) > len(heap):
+                    # bulk path: drop stale entries while we rebuild anyway
+                    fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+                    heap = [
+                        e for e in heap
+                        if fstarted[e[1]] and not fdone[e[1]] and e[2] == ep[e[1]]
+                    ]
+                    heap.extend(entries)
+                    heapq.heapify(heap)
+                    self._done_heap = heap
+                else:
+                    for e in entries:
+                        heapq.heappush(heap, e)
+            if next_chunk:
+                pending.setdefault(d + 1, []).append(
+                    np.asarray(next_chunk, dtype=_I64)
+                )
+        # Peak telemetry (identical comparison sequence to the incremental
+        # engine; peaks are max-folds, so ordering cannot change the result).
+        if self._reg_out:
+            pse = self.peak_shard_egress
+            for skey, egress in self._reg_out.items():
+                if egress > pse.get(skey, 0.0):
+                    pse[skey] = egress
+            total = sum(self._reg_out.values())
+            if total > self.peak_registry_egress:
+                self.peak_registry_egress = total
+        if touched_out:
+            nodes = np.unique(
+                np.fromiter(touched_out, dtype=_I64, count=len(touched_out))
+            )
+            caps = self._nout_cap[nodes]
+            valid = (caps > 0) & np.isfinite(caps)
+            if valid.any():
+                u = float((self._vm_out[nodes[valid]] / caps[valid]).max())
+                if u > self.peak_nic_utilization:
+                    self.peak_nic_utilization = u
+        in_cap = cfg.vm_nic.in_cap
+        if touched_in and in_cap > 0 and in_cap != math.inf:
+            nodes = np.unique(
+                np.fromiter(touched_in, dtype=_I64, count=len(touched_in))
+            )
+            u = float((self._vm_in[nodes] / in_cap).max())
+            if u > self.peak_nic_utilization:
+                self.peak_nic_utilization = u
+
+    def _scalar_level(
+        self,
+        fids: np.ndarray,
+        now: float,
+        flows: list[_VFlowState],
+        touched_out: list[int],
+        touched_in: list[int],
+    ) -> list[int]:
+        """One depth level of ``_recompute`` as scalar math; returns children.
+
+        Gathers each array once, then runs the per-flow min-cap chain /
+        settle / delta accounting in plain Python — the exact operations the
+        vectorized path performs, on the same float64 values in the same
+        order, so results are bit-identical while skipping ~40 fixed-cost
+        numpy dispatches on a handful of flows.
+        """
+        cfg = self.cfg
+        src = self._fsrc[fids]
+        dst = self._fdst[fids]
+        fl = fids.tolist()
+        src_l = src.tolist()
+        dst_l = dst.tolist()
+        no_l = self._nout_cnt[src].tolist()
+        ni_l = self._nin_cnt[dst].tolist()
+        oc_l = self._nout_cap[src].tolist()
+        qps_l = self._nqps[src].tolist()
+        reg_b = self._nreg[src].tolist()
+        blk_l = self._fblk[fids].tolist()
+        par_l = self._fpar[fids].tolist()
+        old_l = self._rate[fids].tolist()
+        tl_l = self._tlast[fids].tolist()
+        rem_l = self._rem[fids].tolist()
+        psc = cfg.per_stream_cap
+        icap = cfg.vm_nic.in_cap
+        dec = cfg.decompress_rate
+        bsz = cfg.block_size
+        rate_a, rem_a, tlast_a, ep_a = self._rate, self._rem, self._tlast, self._epoch
+        fdone = self._fdone
+        names = self._nname
+        reg = self._reg_out
+        vm_out, vm_in = self._vm_out, self._vm_in
+        heap = self._done_heap
+        record = self.record_rates
+        next_chunk: list[int] = []
+        for i, fid in enumerate(fl):
+            n_out = no_l[i]
+            r = min(psc, oc_l[i] / n_out)
+            r = min(r, icap / ni_l[i])
+            r = min(r, dec)
+            if blk_l[i]:
+                r = min(r, bsz * qps_l[i] / n_out)
+            p = par_l[i]
+            if p >= 0 and not fdone[p]:
+                r = min(r, float(rate_a[p]))
+            old = old_l[i]
+            if r == old:
+                continue
+            tl = tl_l[i]
+            if now > tl:
+                if old > 0.0:
+                    rem = max(0.0, rem_l[i] - old * (now - tl))
+                    rem_a[fid] = rem
+                    rem_l[i] = rem
+                tlast_a[fid] = now
+                tl = now
+            delta = r - old
+            s = src_l[i]
+            d = dst_l[i]
+            if reg_b[i]:
+                skey = names[s]
+                reg[skey] = reg.get(skey, 0.0) + delta
+            else:
+                vm_out[s] += delta
+                touched_out.append(s)
+            vm_in[d] += delta
+            touched_in.append(d)
+            rate_a[fid] = r
+            e = int(ep_a[fid]) + 1
+            ep_a[fid] = e
+            if r > 0.0:
+                heapq.heappush(heap, (tl + rem_l[i] / r, fid, e))
+            if record:
+                self.rate_log.append((now, fid, r))
+            # A parent-rate change propagates down the streaming chain.
+            for c in flows[fid].children:
+                if c.started and not c.done:
+                    next_chunk.append(c.fid)
+        return next_chunk
+
+    # ------------------------------------------------------------------
+    def _compact_done_heap(self) -> None:
+        fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+        heap = [
+            e for e in self._done_heap
+            if fstarted[e[1]] and not fdone[e[1]] and e[2] == ep[e[1]]
+        ]
+        heapq.heapify(heap)
+        self._done_heap = heap
+
+    def _next_completion(self) -> float:
+        """Earliest valid completion time (lazily dropping stale entries)."""
+        heap = self._done_heap
+        if len(heap) > max(64, 4 * self._n_active):
+            self._compact_done_heap()
+            heap = self._done_heap
+        fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+        while heap:
+            t, fid, epoch = heap[0]
+            if fdone[fid] or not fstarted[fid] or epoch != ep[fid]:
+                heapq.heappop(heap)
+                continue
+            return t
+        return math.inf
+
+    def _complete_batch(self, batch: list[int]) -> None:
+        """Retire every flow finishing at this instant in (t, fid) order.
+
+        ``np.add.at`` is unbuffered and applies updates in index order, so
+        the per-node running NIC sums see the exact same float sequence as
+        completing the flows one at a time; registry egress keeps the
+        per-flow dict walk because its running sums are order-pinned
+        against the incremental engine.
+        """
+        now = self.now
+        flows = self._flows
+        fa = np.asarray(batch, dtype=_I64)
+        sk = self._fsrc[fa]
+        dk = self._fdst[fa]
+        rt = self._rate[fa]
+        self._fdone[fa] = True
+        self._rem[fa] = 0.0
+        self._tlast[fa] = now
+        np.add.at(self._nout_cnt, sk, -1)
+        np.add.at(self._nin_cnt, dk, -1)
+        isreg = self._nreg[sk]
+        vm = ~isreg
+        if vm.any():
+            np.add.at(self._vm_out, sk[vm], -rt[vm])
+        np.add.at(self._vm_in, dk, -rt)
+        self._n_active -= len(batch)
+        self.events_processed += len(batch)
+        sk_l = sk.tolist()
+        dk_l = dk.tolist()
+        rt_l = rt.tolist()
+        reg_l = isreg.tolist()
+        dn = self._dirty_nodes
+        df = self._dirty_fids
+        nout_f, nin_f = self._nout_fids, self._nin_fids
+        names = self._nname
+        reg = self._reg_out
+        tr = self._trace_raw if self._record_trace else None
+        for i, fid in enumerate(batch):
+            st = flows[fid]
+            st.done = True
+            st.t_done = now
+            s = sk_l[i]
+            d = dk_l[i]
+            nout_f[s].discard(fid)
+            nin_f[d].discard(fid)
+            if reg_l[i]:
+                reg[names[s]] -= rt_l[i]
+            if tr is not None:
+                tr.append((now, 0, fid))
+            # Freed shares on both NICs + the lifted parent-cap on children.
+            dn.add(s)
+            dn.add(d)
+            for c in st.children:
+                if c.started and not c.done:
+                    df.add(c.fid)
+
+    def _settle_active(self) -> None:
+        """Vectorized final settle of every active flow at ``self.now``."""
+        n = len(self._flows)
+        if n == 0:
+            return
+        idx = np.flatnonzero(self._fstarted[:n] & ~self._fdone[:n])
+        if idx.size == 0:
+            return
+        adv = self.now > self._tlast[idx]
+        if not adv.any():
+            return
+        idx = idx[adv]
+        pos = self._rate[idx] > 0.0
+        if pos.any():
+            j = idx[pos]
+            self._rem[j] = np.maximum(
+                0.0, self._rem[j] - self._rate[j] * (self.now - self._tlast[j])
+            )
+        self._tlast[idx] = self.now
+
+    # ------------------------------------------------------------------
+    def run(self, until: float = math.inf) -> float:
+        """Advance until no events remain (or ``until``); returns final time."""
+        flows = self._flows
+        if len(self._ev_pending) > 4096:
+            self._fold_events()  # bulk schedule() outside add_plan
+        pend = self._ev_pending
+        evh = self._ev_heap
+        self._in_run = True
+        try:
+            while True:
+                if pend:
+                    for e in pend:
+                        heapq.heappush(evh, e)
+                    del pend[:]
+                if self._dirty_nodes or self._dirty_fids:
+                    self._recompute()
+                t_done = self._next_completion()
+                t_evt = evh[0][0] if evh else math.inf
+                if self._sptr < len(self._spay):
+                    ts = self._sts[self._sptr]
+                    if ts < t_evt:
+                        t_evt = ts
+                t_next = min(t_done, t_evt)
+                if t_next == math.inf or t_next > until:
+                    if until != math.inf and until > self.now:
+                        self.now = until
+                        self._settle_active()
+                    return self.now
+                self.now = t_next
+                if t_done <= t_evt:
+                    # Batch every completion due at this instant into one
+                    # settle pass: mark them all done first, then fire
+                    # callbacks in deterministic (time, fid) order, then
+                    # re-rate the union of their dirty closures once.
+                    batch: list[int] = []
+                    heap = self._done_heap
+                    fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+                    while heap:
+                        t, fid, epoch = heap[0]
+                        if fdone[fid] or not fstarted[fid] or epoch != ep[fid]:
+                            heapq.heappop(heap)
+                            continue
+                        if t <= self.now:
+                            heapq.heappop(heap)
+                            batch.append(fid)
+                        else:
+                            break
+                    self._complete_batch(batch)
+                    for fid in batch:
+                        st = flows[fid]
+                        if st.on_done is not None:
+                            st.on_done(self.now)
+                else:
+                    # Drain every event due at this instant.  Flow starts are
+                    # handled per-flow in pop order (lifecycle flags, waiter
+                    # releases) but their array bookkeeping is flushed in one
+                    # batch; callables force a flush first so they observe
+                    # fully-applied state.
+                    now = self.now
+                    lim = now + 1e-12
+                    sts, sseq, spay = self._sts, self._sseq, self._spay
+                    sptr = self._sptr
+                    slen = len(spay)
+                    started: list[int] = []
+                    while True:
+                        if pend:
+                            for e in pend:
+                                heapq.heappush(evh, e)
+                            del pend[:]
+                        th = evh[0] if evh else None
+                        # Tie-break: everything in the heap was scheduled
+                        # after the last fold, so its seq is larger than any
+                        # snapshot seq — on equal times the snapshot pops
+                        # first, exactly as one global (t, seq) heap would.
+                        if sptr < slen and (th is None or sts[sptr] <= th[0]):
+                            if sts[sptr] > lim:
+                                break
+                            fn = spay[sptr]
+                            sptr += 1
+                        elif th is not None:
+                            if th[0] > lim:
+                                break
+                            fn = heapq.heappop(evh)[2]
+                        else:
+                            break
+                        self.events_processed += 1
+                        if type(fn) is int:
+                            st = flows[fn]
+                            if st.started or st.done:
+                                continue
+                            p = st.parent
+                            if p is not None and not p.started:
+                                self._arm_start(st)
+                                continue
+                            st.started = True
+                            st.t_start = now
+                            started.append(fn)
+                            # Release children waiting for this flow to start.
+                            if st.waiters:
+                                for w in st.waiters:
+                                    if not w.started and not w.done:
+                                        t = max(
+                                            w.start_after,
+                                            now + w.pipeline_delay,
+                                            now,
+                                        )
+                                        self.schedule(t, w.fid)
+                                st.waiters.clear()
+                        else:
+                            if started:
+                                self._flush_starts(started)
+                                started = []
+                            fn()
+                    self._sptr = sptr
+                    if started:
+                        self._flush_starts(started)
+        finally:
+            self._in_run = False
+
+    # ------------------------------------------------------------------
+    def completion_times(self) -> dict[str, float]:
+        """dst vm_id -> time its payload finished arriving."""
+        out: dict[str, float] = {}
+        for f in self._flows:
+            if f.done:
+                out[f.flow.dst] = max(out.get(f.flow.dst, 0.0), f.t_done)
+        return out
