@@ -1,13 +1,14 @@
 #!/usr/bin/env python
 """Print the headline numbers from every BENCH_*.json in one table.
 
-Consolidates the five benchmark artifacts the repo produces —
+Consolidates the six benchmark artifacts the repo produces —
 
   * ``BENCH_scale.json``     (benchmarks/bench_scale_1000.py: §4.2 burst)
   * ``BENCH_trace.json``     (benchmarks/bench_trace_replay.py: §4.2 traces)
   * ``BENCH_registry.json``  (benchmarks/bench_registry_sweep.py: §4.3)
   * ``BENCH_placement.json`` (benchmarks/bench_placement.py: §3.1/§5 pool)
   * ``BENCH_serving.json``   (benchmarks/bench_serving.py: request serving)
+  * ``BENCH_blocks.json``    (benchmarks/bench_blocks.py: §3.1–§3.2 blocks)
 
 — into one terminal summary, so "where do we stand vs the paper" is a
 single command.  Missing files are reported and skipped, never fatal.
@@ -131,12 +132,32 @@ def summarize_serving(d: dict) -> None:
     )
 
 
+def summarize_blocks(d: dict) -> None:
+    sh, rp = d["layer_sharing"], d["runnable_at_prefix"]
+    amp = d["read_amplification"]["by_block_size"]
+    k512 = str(512 * 1024)
+    print(
+        f"  {sh['n_functions']} fns on {sh['n_bases']} shared bases: "
+        f"{sh['runnable_speedup_shared_vs_disjoint']:.2f}x faster to runnable "
+        f"than disjoint ({sh['shared_runnable_total_s']:.1f}s vs "
+        f"{sh['disjoint_runnable_total_s']:.1f}s)"
+    )
+    print(
+        f"  runnable at boot prefix {rp['runnable_makespan_s']:.2f}s vs full "
+        f"arrival {rp['full_arrival_makespan_s']:.2f}s "
+        f"({rp['runnable_vs_full_ratio']:.0%}); Fig. 20 @ 512 KB blocks: "
+        f"amp {amp[k512]['read_amplification']:.3f}, boot fetch "
+        f"{amp[k512]['fetched_fraction_of_image']:.1%} of the image"
+    )
+
+
 SECTIONS = (
     ("BENCH_scale.json", "scale burst (§4.2)", summarize_scale),
     ("BENCH_trace.json", "multi-tenant traces (§4.2)", summarize_trace),
     ("BENCH_registry.json", "registry shard sweep (§4.3)", summarize_registry),
     ("BENCH_placement.json", "shared pool placement (§3.1/§5)", summarize_placement),
     ("BENCH_serving.json", "request-level serving (§4.4)", summarize_serving),
+    ("BENCH_blocks.json", "block-level provisioning (§3.1–§3.2)", summarize_blocks),
 )
 
 

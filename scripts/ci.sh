@@ -263,4 +263,59 @@ print(
 )
 PY
 
+# Block-provisioning smoke: the §3.1–§3.2 block/layer path must (a) leave
+# the legacy scalar goldens bit-identical when disabled (cfg.image=None is
+# the default — same WaveConfig, same engines, same numbers), (b) make layer
+# sharing pay: consecutive waves from shared base images dedup in the per-VM
+# block caches and beat disjoint images to runnable, and (c) keep the
+# incremental and vector engines bit-identical with blocks ON.
+python - <<'PY'
+import time
+from repro.core import BlockCache, shared_base_images, disjoint_images
+from repro.sim import WaveConfig, block_wave, provision_wave
+
+t0 = time.perf_counter()
+legacy = {s: provision_wave(s, 32, WaveConfig()) for s in ("faasnet", "baseline")}
+again = {s: provision_wave(s, 32, WaveConfig(image=None)) for s in ("faasnet", "baseline")}
+assert legacy == again, (
+    "blocks smoke FAILED: cfg.image=None perturbed the legacy scalar waves"
+)
+
+def deploy(images):
+    cache = BlockCache()
+    cfg = WaveConfig(container_start=0.5)
+    return sum(
+        max(v["runnable"] for v in block_wave("faasnet", 4, cfg, images=img,
+                                              cache=cache).values())
+        for img in images
+    )
+
+shared = deploy(shared_base_images(6, 2, image_bytes=128 << 20))
+disjoint = deploy(disjoint_images(6, image_bytes=128 << 20))
+assert shared < disjoint, (
+    f"blocks smoke FAILED: shared bases {shared:.1f}s not faster than "
+    f"disjoint {disjoint:.1f}s — block-cache dedup is not paying"
+)
+
+img = shared_base_images(1, 1, image_bytes=128 << 20)[0]
+inc = block_wave("faasnet", 16, WaveConfig(engine="incremental"), images=img)
+vec = block_wave("faasnet", 16, WaveConfig(engine="vector"), images=img)
+assert inc == vec, (
+    "blocks smoke FAILED: engine divergence on the block wave"
+)
+assert all(v["runnable"] < v["done"] for v in inc.values()), (
+    "blocks smoke FAILED: runnable milestone did not precede full arrival"
+)
+elapsed = time.perf_counter() - t0
+budget = 10.0
+assert elapsed < budget, (
+    f"blocks smoke FAILED: took {elapsed:.2f} s (budget {budget} s)"
+)
+print(
+    f"blocks smoke ok: blocks-off bit-identical, shared bases "
+    f"{disjoint / shared:.2f}x faster to runnable, engines match, in "
+    f"{elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

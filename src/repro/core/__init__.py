@@ -28,10 +28,13 @@ from .topology import (
     REGISTRY,
     DistributionPlan,
     Flow,
+    baseline_block_plan,
     baseline_plan,
     dadi_plan,
+    faasnet_block_plan,
     faasnet_plan,
     kraken_plan,
+    on_demand_block_plan,
     on_demand_plan,
 )
 
@@ -44,17 +47,33 @@ _BLOCKSTORE_EXPORTS = (
     "write_blockstore",
 )
 
+# Image/block model symbols are lazy for the same reason as the blockstore:
+# ``repro.core.image`` imports the blockstore for its manifest geometry.
+_IMAGE_EXPORTS = (
+    "BlockCache",
+    "ImageSpec",
+    "LayerSpec",
+    "disjoint_images",
+    "shared_base_images",
+)
+
 
 def __getattr__(name: str):
     if name in _BLOCKSTORE_EXPORTS:
         from . import blockstore
 
         return getattr(blockstore, name)
+    if name in _IMAGE_EXPORTS:
+        from . import image
+
+        return getattr(image, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__() -> list[str]:
-    return sorted(list(globals()) + list(_BLOCKSTORE_EXPORTS))
+    return sorted(
+        list(globals()) + list(_BLOCKSTORE_EXPORTS) + list(_IMAGE_EXPORTS)
+    )
 
 
 __all__ = [
@@ -85,8 +104,16 @@ __all__ = [
     "DistributionPlan",
     "Flow",
     "baseline_plan",
+    "baseline_block_plan",
     "dadi_plan",
     "faasnet_plan",
+    "faasnet_block_plan",
     "kraken_plan",
     "on_demand_plan",
+    "on_demand_block_plan",
+    "BlockCache",
+    "ImageSpec",
+    "LayerSpec",
+    "disjoint_images",
+    "shared_base_images",
 ]

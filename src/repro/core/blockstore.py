@@ -98,11 +98,12 @@ class _ZlibCodec:
         return out
 
 
-def _make_codec(name: str, level: int):
+def _make_codec(name: str, level: int | None = None):
+    """Build a codec; ``level=None`` means the codec's own default (zstd 3 / zlib 6)."""
     if name == "zstd":
-        return _ZstdCodec(level)
+        return _ZstdCodec() if level is None else _ZstdCodec(level)
     if name == "zlib":
-        return _ZlibCodec(level)
+        return _ZlibCodec() if level is None else _ZlibCodec(level)
     raise ValueError(f"unknown blockstore codec {name!r}")
 
 
@@ -166,12 +167,14 @@ def write_blockstore(
     path: str,
     *,
     block_size: int = DEFAULT_BLOCK_SIZE,
-    level: int = 3,
+    level: int | None = None,
     codec: str | None = None,
 ) -> BlockManifest:
     """Convert ``payload`` into the I/O-efficient format (gateway's job, §3.1).
 
     ``codec`` defaults to zstd when available, else the stdlib zlib fallback.
+    ``level=None`` uses the selected codec's own default (zstd 3, zlib 6) —
+    a pinned numeric level applies verbatim to whichever codec is chosen.
     """
     codec = codec or default_codec()
     cctx = _make_codec(codec, level)
@@ -247,7 +250,7 @@ class BlockReader:
         self.manifest = manifest or read_manifest(path)
         self._data_start = _HEADER.size + 8 * (self.manifest.n_blocks + 1)
         self._cache: dict[int, bytes] = {}
-        self._codec = _make_codec(self.manifest.codec, 0)
+        self._codec = _make_codec(self.manifest.codec)  # decompress side: level moot
         self.stats = ReadStats()
         self._f = open(path, "rb")
         self.file_reads = 0  # seek+read syscall pairs issued (coalescing telemetry)
@@ -317,6 +320,8 @@ class BlockReader:
     # -- range-level (on-demand I/O) --------------------------------------
     def read_range(self, offset: int, length: int) -> bytes:
         m = self.manifest
+        if length < 0:
+            raise ValueError(f"negative read length {length}")
         if offset < 0 or offset + length > m.raw_size:
             raise ValueError(
                 f"range [{offset}, {offset + length}) outside payload of {m.raw_size}"

@@ -108,6 +108,9 @@ class FTManager:
         self._seed_loads: dict[str, int] = {}  # vm_id -> Σ children over trees
         self._vm_order: dict[str, int] = {}  # registration index (sort tie-break)
         self._placement_heap: list[tuple] = []  # (key..., vm_id), lazily pruned
+        # Content-aware root election (§3.1): optional data-plane scorer,
+        # see set_content_affinity.  Never serialized.
+        self._content_affinity = None
         # counters for tests / telemetry
         self.stats = {
             "inserts": 0,
@@ -116,6 +119,7 @@ class FTManager:
             "reclaims": 0,
             "reservations": 0,
             "waves": 0,
+            "content_roots": 0,
         }
 
     # ------------------------------------------------------------------
@@ -304,6 +308,56 @@ class FTManager:
         ]
         heapq.heapify(self._placement_heap)
 
+    def set_content_affinity(self, fn) -> None:
+        """Attach a content-residency scorer for root election (§3.1).
+
+        ``fn(function_id, vm_id) -> int`` reports how many bytes of the
+        function's image are already resident on a VM (e.g.
+        ``BlockCache.resident_bytes``).  When a function's *first* instance
+        is placed — root election; the root fetches from the registry, so
+        starting it where the base layers already live saves the most
+        backbone traffic — :meth:`pick_vm_for` prefers the admissible VM
+        with the most resident bytes and falls back to the normal placement
+        path when nothing scores above zero.  The scorer is data-plane
+        state: it does not ride :meth:`snapshot`, re-attach after restore.
+        """
+        self._content_affinity = fn
+
+    def _content_root_for(self, function_id: str, now: float) -> Optional[VMInfo]:
+        """Root election: the admissible VM holding the most image bytes."""
+        need = self.mem_need(function_id)
+        best: Optional[VMInfo] = None
+        best_key: Optional[tuple] = None
+        for vm_id, vm in self.vms.items():
+            if not vm.alive or function_id in vm.functions:
+                continue
+            if len(vm.functions) >= self.max_functions_per_vm:
+                continue
+            if vm.mem_used_mb + need > vm.mem_mb:
+                continue
+            resident = int(self._content_affinity(function_id, vm_id))
+            if resident <= 0:
+                continue
+            key = (
+                -resident,
+                len(vm.functions),
+                self._seed_loads.get(vm_id, 0),
+                self._vm_order[vm_id],
+            )
+            if best_key is None or key < best_key:
+                best_key, best = key, vm
+        if best is None:
+            return None
+        if best.vm_id in self._free_ids:
+            # promote the warm-cache VM straight out of the free pool; the
+            # deque keeps FIFO order for everyone else
+            self.free_pool.remove(best.vm_id)
+            self._free_ids.discard(best.vm_id)
+            self.stats["reservations"] += 1
+        best.last_active = now
+        self.stats["content_roots"] += 1
+        return best
+
     def pick_vm_for(self, function_id: str, now: float = 0.0) -> Optional[VMInfo]:
         """Choose a host for a new instance of ``function_id``.
 
@@ -326,6 +380,10 @@ class FTManager:
         may be dropped safely: any change to the count changes the key and
         re-pushes a live entry.
         """
+        if self._content_affinity is not None and function_id not in self.trees:
+            vm = self._content_root_for(function_id, now)
+            if vm is not None:
+                return vm
         if len(self._placement_heap) > max(64, 4 * len(self.vms)):
             self._rebuild_heap()  # mostly-stale heap: rebuild and re-amortize
         need = self.mem_need(function_id)

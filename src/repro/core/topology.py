@@ -47,6 +47,11 @@ class Flow:
     dst: str
     piece: str  # e.g. "img" for whole payload, "layer3", "blk:17"
     bytes: int
+    # Leading bytes of this flow that belong to the dst's boot working set
+    # (paper §3.2): once they land the engine fires ``on_node_runnable`` for
+    # the dst, ahead of full arrival.  0 (the default) means the flow carries
+    # no runnable prefix — scalar plans are unchanged.
+    runnable_bytes: int = 0
 
 
 @dataclass
@@ -150,8 +155,9 @@ def kraken_plan(
     """Each layer forms its own random peer graph rooted at the origin.
 
     Every node fetches every layer; the source for (node, layer) is a random
-    earlier peer in that layer's join order (or the origin for the first
-    ``max_peers`` nodes).  Because layer trees are independent, a node ends
+    peer among the up-to-``max_peers`` nodes immediately before it in that
+    layer's join order (the layer's first joiner seeds from the origin).
+    Because layer trees are independent, a node ends
     up with inbound+outbound edges across many trees — the all-to-all mesh
     the paper argues overwhelms 1 Gbps NICs.  The origin additionally
     coordinates every (node, layer) announce — serialized on its CPU by the
@@ -221,3 +227,122 @@ def dadi_plan(
     return DistributionPlan(
         flows=flows, control_latency=control, coordinator=coordinator, streaming=True
     )
+
+
+# ----------------------------------------------------------------------
+# Block-level plans (paper §3.1–§3.2): per-layer flows, cache-aware
+# ----------------------------------------------------------------------
+# These builders replace the scalar ``image_bytes * startup_fraction`` model
+# with an :class:`~repro.core.image.ImageSpec`: one flow per *missing* layer
+# (blocks already resident in the VM's :class:`~repro.core.image.BlockCache`
+# are served locally and never travel), with ``Flow.runnable_bytes`` marking
+# each flow's share of the boot working set so the engines can fire the
+# runnable milestone ahead of full arrival.  Pieces are layer *digests* —
+# content-addressed, so shard hashing and streaming chains line up across
+# functions sharing base layers.
+
+
+def _cached_marker_flow(src: str, vm: str, image_name: str) -> Flow:
+    """Zero-byte flow for a fully resident node: milestones must still fire."""
+    return Flow(src, vm, f"{image_name}:cached", 0)
+
+
+def faasnet_block_plan(
+    ft: FunctionTree,
+    *,
+    image,
+    cache=None,
+    manifest_latency: float = 0.010,
+    registry: RegistrySpec | ShardResolver | None = None,
+) -> DistributionPlan:
+    """Per-layer FT streaming with block-cache skips.
+
+    Each missing layer streams down the node's FT edge as its own flow.  A
+    parent holding the layer serves it from cache (§3.1) — there is then no
+    parent-side flow with that digest, so the child's stream is unchained
+    and runs at full NIC rate.  The root sources each missing layer from the
+    shard its digest hashes to.
+    """
+    from .image import BlockCache
+
+    cache = cache if cache is not None else BlockCache()
+    resolver = as_resolver(registry)
+    flows = []
+    control = {}
+    for node in ft.bfs():
+        vm = node.vm_id
+        parent = ft.parent_of(vm)
+        n_before = len(flows)
+        for la in image.layers:
+            need, boot = cache.missing_layer_bytes(vm, image, la.digest)
+            if need <= 0:
+                continue
+            src = parent or resolver.source_for(la.digest, nbytes=need)
+            flows.append(Flow(src, vm, la.digest, need, runnable_bytes=boot))
+        if len(flows) == n_before:
+            src = parent or resolver.source_for(image.name, nbytes=0)
+            flows.append(_cached_marker_flow(src, vm, image.name))
+        control[vm] = manifest_latency
+    return DistributionPlan(flows=flows, control_latency=control, streaming=True)
+
+
+def on_demand_block_plan(
+    nodes: list[str],
+    *,
+    image,
+    cache=None,
+    manifest_latency: float = 0.010,
+    registry: RegistrySpec | ShardResolver | None = None,
+) -> DistributionPlan:
+    """Registry-served lazy block fetch: missing layers only, runnable at prefix."""
+    from .image import BlockCache
+
+    cache = cache if cache is not None else BlockCache()
+    resolver = as_resolver(registry)
+    flows = []
+    for n in nodes:
+        n_before = len(flows)
+        for la in image.layers:
+            need, boot = cache.missing_layer_bytes(n, image, la.digest)
+            if need <= 0:
+                continue
+            src = resolver.source_for(la.digest, nbytes=need)
+            flows.append(Flow(src, n, la.digest, need, runnable_bytes=boot))
+        if len(flows) == n_before:
+            flows.append(
+                _cached_marker_flow(resolver.source_for(image.name, nbytes=0), n, image.name)
+            )
+    control = {n: manifest_latency for n in nodes}
+    return DistributionPlan(flows=flows, control_latency=control, streaming=True)
+
+
+def baseline_block_plan(
+    nodes: list[str],
+    *,
+    image,
+    cache=None,
+    registry: RegistrySpec | ShardResolver | None = None,
+) -> DistributionPlan:
+    """docker pull with a layer cache: whole missing layers, runnable == arrival.
+
+    Docker's cache is layer-granular and all-or-nothing — a partially
+    resident layer is re-pulled whole — and a container cannot start before
+    the full pull, so every flow's runnable prefix is its entire payload.
+    """
+    from .image import BlockCache
+
+    cache = cache if cache is not None else BlockCache()
+    resolver = as_resolver(registry)
+    flows = []
+    for n in nodes:
+        n_before = len(flows)
+        for la in image.layers:
+            if cache.resident_blocks(n, la.digest) >= image.layer_blocks(la.digest):
+                continue  # fully cached layer: docker skips it
+            src = resolver.source_for(la.digest, nbytes=la.size)
+            flows.append(Flow(src, n, la.digest, la.size, runnable_bytes=la.size))
+        if len(flows) == n_before:
+            flows.append(
+                _cached_marker_flow(resolver.source_for(image.name, nbytes=0), n, image.name)
+            )
+    return DistributionPlan(flows=flows, streaming=False)

@@ -7,7 +7,15 @@ from repro.core.reclaim import (
 )
 from repro.core.registry import RegistrySpec, ShardResolver
 
-from .cluster import SYSTEMS, WaveConfig, provision_wave, scalability_table, startup_timeline
+from .cluster import (
+    BLOCK_SYSTEMS,
+    SYSTEMS,
+    WaveConfig,
+    block_wave,
+    provision_wave,
+    scalability_table,
+    startup_timeline,
+)
 from .engine import ENGINES, GBPS, FlowSim, NICConfig, SimConfig, make_sim
 from .multi_tenant import (
     PLACEMENTS,
@@ -46,8 +54,10 @@ __all__ = [
     "RegistrySpec",
     "ShardResolver",
     "SYSTEMS",
+    "BLOCK_SYSTEMS",
     "PLACEMENTS",
     "WaveConfig",
+    "block_wave",
     "provision_wave",
     "scalability_table",
     "startup_timeline",

@@ -13,10 +13,13 @@ from dataclasses import dataclass, field
 from repro.core import FunctionTree, RPCCosts
 from repro.core.registry import RegistrySpec, ShardResolver
 from repro.core.topology import (
+    baseline_block_plan,
     baseline_plan,
     dadi_plan,
+    faasnet_block_plan,
     faasnet_plan,
     kraken_plan,
+    on_demand_block_plan,
     on_demand_plan,
 )
 
@@ -63,6 +66,12 @@ class WaveConfig:
     # into SimConfig by every wave/replay entry point.
     engine: str = "incremental"
     record_trace: bool = True
+    # Block-level provisioning (paper §3.1–§3.2): when set, provision_wave
+    # fetches this image's missing blocks per layer instead of the scalar
+    # ``image_bytes * startup_fraction`` payload, and a container is ready
+    # at its *runnable prefix* (boot working set), not full arrival.
+    # ``None`` (the default) keeps the scalar model bit-identically.
+    image: "object | None" = None  # repro.core.image.ImageSpec
 
     def registry_spec(self) -> RegistrySpec:
         return RegistrySpec.resolve(
@@ -92,6 +101,16 @@ def provision_wave(
     FaaSNet's adaptivity applied to stragglers.
     """
     cfg = cfg or WaveConfig()
+    if cfg.image is not None and system in ("faasnet", "baseline", "on_demand"):
+        # Block-level provisioning: a container is ready once its boot
+        # working set (runnable prefix) landed, not at full arrival.
+        if warm_roots or slow_vms or straggler_mitigation:
+            raise ValueError(
+                "block-level waves (cfg.image) do not support warm_roots/"
+                "slow_vms/straggler_mitigation"
+            )
+        res = block_wave(system, n, cfg, images=cfg.image)
+        return {vm: v["runnable"] for vm, v in res.items()}
     nodes = [f"vm{i}" for i in range(n)]
     coord_cost = {"kraken": cfg.kraken_coord_s, "dadi_p2p": cfg.dadi_coord_s}.get(
         system, 0.0
@@ -195,6 +214,118 @@ def _mark_warm(plan, warm: set[str]):
         coordinator=plan.coordinator,
         streaming=plan.streaming,
     )
+
+
+BLOCK_SYSTEMS = ("faasnet", "baseline", "on_demand")
+
+
+def block_wave(
+    system: str,
+    n: int,
+    cfg: WaveConfig | None = None,
+    *,
+    images=None,
+    cache=None,
+) -> dict[str, dict[str, float]]:
+    """Block-granular provisioning wave: per-VM runnable + full-arrival times.
+
+    ``images`` is one :class:`~repro.core.image.ImageSpec` for all ``n`` VMs
+    or a per-VM list; ``cache`` is the cross-wave
+    :class:`~repro.core.image.BlockCache` (fresh by default) — pass the same
+    cache across consecutive waves to model warm block reuse, and distinct
+    images sharing base layers to model cross-function dedup.  Returns
+    ``vm_id -> {"runnable": t, "done": t}``: *runnable* is the paper's §3.2
+    boot-working-set milestone plus container start, *done* is full image
+    materialization plus the same tail.  Each VM's fetched image is recorded
+    in ``cache`` after the wave.
+    """
+    from repro.core.image import BlockCache, ImageSpec
+
+    cfg = cfg or WaveConfig()
+    if images is None:
+        images = cfg.image
+    if images is None:
+        raise ValueError("block_wave needs an ImageSpec (images= or cfg.image)")
+    if isinstance(images, ImageSpec):
+        images = [images] * n
+    if len(images) != n:
+        raise ValueError(f"need one image per VM: {len(images)} images, {n} VMs")
+    cache = cache if cache is not None else BlockCache()
+    nodes = [f"vm{i}" for i in range(n)]
+    img_of = dict(zip(nodes, images))
+    spec = cfg.registry_spec()
+    resolver = ShardResolver(spec)
+    sim = make_sim(
+        SimConfig(
+            registry=spec,
+            per_stream_cap=cfg.per_stream_cap,
+            hop_latency=cfg.hop_latency,
+            engine=cfg.engine,
+            record_trace=cfg.record_trace,
+        )
+    )
+    control = cfg.rpc.control_plane_total()
+    runnable_at: dict[str, float] = {}
+    done_at: dict[str, float] = {}
+
+    def on_runnable(vm: str, t: float) -> None:
+        runnable_at.setdefault(vm, t)
+
+    def on_done(vm: str, t: float) -> None:
+        done_at[vm] = max(done_at.get(vm, 0.0), t)  # last layer = full image
+
+    # One plan per distinct image: FT fan-out stays within an image's VMs.
+    groups: dict[str, list[str]] = {}
+    for vm in nodes:
+        groups.setdefault(img_of[vm].name, []).append(vm)
+    for vms in groups.values():
+        img = img_of[vms[0]]
+        if system == "faasnet":
+            ft = FunctionTree(img.name)
+            for vm in vms:
+                ft.insert(vm)
+            plan = faasnet_block_plan(
+                ft,
+                image=img,
+                cache=cache,
+                manifest_latency=cfg.rpc.manifest_fetch,
+                registry=resolver,
+            )
+        elif system == "on_demand":
+            plan = on_demand_block_plan(
+                vms,
+                image=img,
+                cache=cache,
+                manifest_latency=cfg.rpc.manifest_fetch,
+                registry=resolver,
+            )
+        elif system == "baseline":
+            plan = baseline_block_plan(
+                vms, image=img, cache=cache, registry=resolver
+            )
+        else:
+            raise ValueError(
+                f"unknown block system {system!r}; one of {BLOCK_SYSTEMS}"
+            )
+        sim.add_plan(
+            plan, t0=control, on_node_done=on_done, on_node_runnable=on_runnable
+        )
+    sim.run()
+    out: dict[str, dict[str, float]] = {}
+    for vm in nodes:
+        img = img_of[vm]
+        if vm not in runnable_at or vm not in done_at:  # pragma: no cover
+            raise RuntimeError(f"{system}: {vm} never finished its block fetch")
+        if system == "baseline":
+            extra = cfg.container_start + img.total_bytes() / cfg.image_extract_rate
+        else:
+            extra = cfg.container_start + cfg.rpc.image_load
+        out[vm] = {
+            "runnable": runnable_at[vm] + extra,
+            "done": done_at[vm] + extra,
+        }
+        cache.add_image(vm, img)
+    return out
 
 
 def scalability_table(

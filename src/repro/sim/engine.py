@@ -65,6 +65,7 @@ __all__ = [
     "FlowSim",
     "make_sim",
     "plan_releases",
+    "wire_runnable",
 ]
 
 #: Engine backends selectable via :attr:`SimConfig.engine`.  They form an
@@ -145,6 +146,43 @@ def plan_releases(
     return out
 
 
+def wire_runnable(sim, states, on_node_runnable) -> None:
+    """Attach runnable-prefix milestones to one wave's flow states (§3.2).
+
+    For every dst with flows carrying a runnable prefix (``runnable_bytes``
+    > 0), fire ``on_node_runnable(dst, t)`` the moment the *last* of those
+    prefixes lands — ahead of full arrival.  A dst whose flows carry no
+    prefix (boot working set fully cached, or only zero-byte marker flows)
+    is runnable at its control-plane release and gets a scheduled event
+    instead.  Shared by all three engine backends, called at the same point
+    of each ``add_plan`` so event ordering cannot drift between them.
+    """
+    if on_node_runnable is None:
+        return
+    pending: dict[str, int] = {}
+    for st in states:
+        nb = min(int(st.flow.runnable_bytes), int(st.flow.bytes))
+        if nb > 0:
+            st.notify_bytes = float(nb)
+            pending[st.flow.dst] = pending.get(st.flow.dst, 0) + 1
+
+    def landed(t: float, dst: str) -> None:
+        pending[dst] -= 1
+        if pending[dst] == 0:
+            on_node_runnable(dst, t)
+
+    release: dict[str, float] = {}
+    for st in states:
+        dst = st.flow.dst
+        if st.notify_bytes > 0.0:
+            st.on_notify = lambda t, dst=dst: landed(t, dst)
+        r = release.get(dst)
+        release[dst] = st.start_after if r is None else min(r, st.start_after)
+    for dst, t_rel in release.items():
+        if dst not in pending:
+            sim.schedule(t_rel, lambda dst=dst: on_node_runnable(dst, sim.now))
+
+
 def make_sim(cfg: SimConfig | None = None, *, record_rates: bool = False):
     """Build the flow simulator selected by ``cfg.engine``.
 
@@ -184,6 +222,12 @@ class _FlowState:
     block_mode: bool = False  # block-granular range requests (registry-throttled)
     pipeline_delay: float = 0.0  # child start lag behind parent start
     on_done: Optional[Callable[[float], None]] = None
+    # Runnable-prefix milestone (paper §3.2): once ``notify_bytes`` of this
+    # flow have landed, ``on_notify`` fires (at most once) — the dst can boot
+    # while the rest of the payload keeps materializing in the background.
+    notify_bytes: float = 0.0
+    notified: bool = False
+    on_notify: Optional[Callable[[float], None]] = None
     fid: int = -1  # dense engine-assigned id; all registries key on it
     t_last: float = 0.0  # time ``remaining`` was last settled
     epoch: int = 0  # bumped on every rate change; stale heap entries skip
@@ -209,6 +253,7 @@ class FlowSim:
         self._out: dict[str, dict[int, _FlowState]] = {}  # node -> active out flows
         self._in: dict[str, dict[int, _FlowState]] = {}  # node -> active in flows
         self._done_heap: list[tuple[float, int, int]] = []  # (t_finish, fid, epoch)
+        self._notify_heap: list[tuple[float, int, int]] = []  # (t_prefix, fid, epoch)
         self._n_active = 0  # started-and-not-done flows (heap compaction bound)
         self._pending_dirty: dict[int, _FlowState] = {}
         self._record_trace = self.cfg.record_trace
@@ -286,27 +331,34 @@ class FlowSim:
         *,
         t0: float = 0.0,
         on_node_done: Optional[Callable[[str, float], None]] = None,
+        on_node_runnable: Optional[Callable[[str, float], None]] = None,
         coordinator_queues: Optional[dict[str, float]] = None,
     ) -> list[_FlowState]:
         """Register a provisioning wave starting at ``t0``.
 
         ``coordinator_queues`` carries serialization state for root/origin
         coordinators across plans (the Kraken-origin / DADI-root CPU queue).
+        ``on_node_runnable`` fires per dst when its runnable block prefixes
+        land (see :func:`wire_runnable`); with no prefix flows in the plan it
+        is equivalent to firing at each dst's control release.
         """
         cfg = self.cfg
         coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
-        by_dst: dict[str, _FlowState] = {}
+        by_dst: dict[tuple[str, str], _FlowState] = {}
         states: list[_FlowState] = []
         for fl, release, block_mode in plan_releases(plan, cfg, t0, coordinator_queues):
             st = _FlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
                             start_after=release, block_mode=block_mode)
             states.append(st)
-            # streaming dependency: dst of the parent flow == src of this flow
-            by_dst.setdefault(fl.dst, st)
+            # streaming dependency: dst of the parent flow == src of this
+            # flow, matched per piece (multi-layer plans chain each layer's
+            # stream to the parent's stream of the *same* layer; a parent
+            # serving a layer from cache has no such flow → child unchained).
+            by_dst.setdefault((fl.dst, fl.piece), st)
         if plan.streaming:
             block_t = cfg.block_size / cfg.vm_nic.in_cap
             for st in states:
-                up = by_dst.get(st.flow.src)
+                up = by_dst.get((st.flow.src, st.flow.piece))
                 if up is not None:
                     self.set_parent(st, up)
                     st.start_after = max(st.start_after, t0)  # start gated below
@@ -321,6 +373,7 @@ class FlowSim:
             st.fid = len(self._flows)
             self._flows.append(st)
             self._arm_start(st)
+        wire_runnable(self, states, on_node_runnable)
         return states
 
     def _arm_start(self, st: _FlowState) -> None:
@@ -426,6 +479,14 @@ class FlowSim:
                     heapq.heappush(
                         self._done_heap, (f.t_last + f.remaining / r, f.fid, f.epoch)
                     )
+                    if f.on_notify is not None and not f.notified:
+                        # prefix-landing estimate under the new rate; a
+                        # threshold already passed clamps to "due now"
+                        pend = f.notify_bytes - (f.total - f.remaining)
+                        heapq.heappush(
+                            self._notify_heap,
+                            (f.t_last + max(0.0, pend) / r, f.fid, f.epoch),
+                        )
                 if self.record_rates:
                     self.rate_log.append((self.now, f.fid, r))
                 # A parent-rate change propagates down the streaming chain.
@@ -483,6 +544,29 @@ class FlowSim:
             return t
         return math.inf
 
+    def _next_notify(self) -> float:
+        """Earliest valid runnable-prefix time (same lazy invalidation)."""
+        if len(self._notify_heap) > max(
+            self._HEAP_COMPACT_MIN, 4 * self._n_active
+        ):
+            self._notify_heap = [
+                e
+                for e in self._notify_heap
+                if (f := self._flows[e[1]]).started
+                and not f.done
+                and not f.notified
+                and e[2] == f.epoch
+            ]
+            heapq.heapify(self._notify_heap)
+        while self._notify_heap:
+            t, fid, epoch = self._notify_heap[0]
+            f = self._flows[fid]
+            if f.done or not f.started or f.notified or epoch != f.epoch:
+                heapq.heappop(self._notify_heap)
+                continue
+            return t
+        return math.inf
+
     def _complete(self, f: _FlowState) -> None:
         fl = f.flow
         f.done = True
@@ -518,8 +602,9 @@ class FlowSim:
                 dirty, self._pending_dirty = self._pending_dirty, {}
                 self._recompute(dirty)
             t_done = self._next_completion()
+            t_noti = self._next_notify()
             t_evt = self._events[0][0] if self._events else math.inf
-            t_next = min(t_done, t_evt)
+            t_next = min(t_done, t_noti, t_evt)
             if t_next == math.inf or t_next > until:
                 if until != math.inf and until > self.now:
                     self.now = until
@@ -528,7 +613,24 @@ class FlowSim:
                             self._settle(f)
                 return self.now
             self.now = t_next
-            if t_done <= t_evt:
+            if t_noti <= t_done and t_noti <= t_evt:
+                # Runnable prefixes land before (or exactly at) the flow's
+                # own completion — fire every notify due at this instant in
+                # deterministic (time, fid) order, then loop.
+                while self._notify_heap:
+                    t, fid, epoch = self._notify_heap[0]
+                    f = self._flows[fid]
+                    if f.done or not f.started or f.notified or epoch != f.epoch:
+                        heapq.heappop(self._notify_heap)
+                        continue
+                    if t > self.now:
+                        break
+                    heapq.heappop(self._notify_heap)
+                    f.notified = True
+                    self.events_processed += 1
+                    if f.on_notify is not None:
+                        f.on_notify(self.now)
+            elif t_done <= t_evt:
                 # Batch every completion due at this instant into one settle
                 # pass: mark them all done first, then fire callbacks in
                 # deterministic (time, fid) order, then re-rate the union of
@@ -547,6 +649,14 @@ class FlowSim:
                         break
                 for f in batch:
                     self._complete(f)
+                # A completed flow's prefix landed by definition: fire any
+                # notify that has not gone out yet (runnable <= done always),
+                # before the done callbacks.
+                for f in batch:
+                    if f.on_notify is not None and not f.notified:
+                        f.notified = True
+                        self.events_processed += 1
+                        f.on_notify(self.now)
                 for f in batch:
                     if f.on_done is not None:
                         f.on_done(self.now)

@@ -195,6 +195,15 @@ class MultiTenantConfig:
     # dispatch loop BIT-identically (goldens pinned in
     # tests/test_request_serving.py + tests/test_placement.py).
     serving: Optional[ServingConfig] = None
+    # Block-level provisioning (paper §3.1–§3.2): function_id -> ImageSpec.
+    # When set, provisioning emits per-layer flows that skip blocks already
+    # resident in the shared per-VM BlockCache, instances activate at the
+    # boot-working-set (runnable) milestone instead of full arrival, full
+    # materialization lands in the cache for later waves to dedup against,
+    # a VM's cache is evicted when it returns to the free pool, and root
+    # election prefers VMs already holding the image's blobs.  ``None``
+    # (default) keeps the scalar payload model bit-identically.
+    images: "Optional[dict]" = None  # dict[str, repro.core.image.ImageSpec]
     # Scheduler failover: snapshot/json-round-trip/restore the FTManager at
     # the *start* of this tick (None = never).  The replay must be
     # bit-identical either way.
@@ -282,6 +291,10 @@ class _TenantState:
         self.instances: dict[str, _Instance] = {}  # warm, by vm_id
         self.provisioning: dict[str, float] = {}  # vm_id -> request time
         self.flow_of: dict[str, object] = {}  # vm_id -> _FlowState
+        # Block mode: vm_id -> {layer digest -> _FlowState} for per-piece
+        # cross-wave streaming chains (a child fetches a layer from the
+        # parent's in-flight stream of the SAME layer, never another's).
+        self.block_flow_of: dict[str, dict[str, object]] = {}
         self.queue: deque[float] = deque()
         self.responses: list[tuple[float, float]] = []  # (completion_t, latency)
         self.prov_latencies: list[float] = []
@@ -346,6 +359,22 @@ class MultiTenantReplay:
         for t in cfg.tenants:
             self.mgr.set_function_mem(t.function_id, t.mem_mb)
         self.tenants: list[_TenantState] = [_TenantState(t) for t in cfg.tenants]
+        # Block mode: ONE shared per-VM block cache across all tenants —
+        # data-plane state (it lives with the VMs, not the scheduler), so it
+        # survives failover without riding the snapshot.
+        self.block_cache = None
+        if cfg.images is not None:
+            from repro.core.image import BlockCache
+
+            missing = [
+                t.function_id
+                for t in cfg.tenants
+                if t.function_id not in cfg.images
+            ]
+            if missing:
+                raise ValueError(f"cfg.images missing tenants: {missing}")
+            self.block_cache = BlockCache()
+            self.mgr.set_content_affinity(self._image_affinity)
         self.failovers = 0
         self.vm_seconds = 0.0
         # Serving mode: per-VM completion times of in-flight requests across
@@ -357,6 +386,12 @@ class MultiTenantReplay:
             vm_idle_reclaim_s=self.cfg.idle_reclaim_s,
             ft_aware_placement=self.cfg.ft_aware_placement,
             reclaim=self.cfg.reclaim_policy(),
+        )
+
+    def _image_affinity(self, function_id: str, vm_id: str) -> int:
+        """Content-aware root-election score: image bytes resident on the VM."""
+        return self.block_cache.resident_bytes(
+            vm_id, self.cfg.images[function_id]
         )
 
     # ------------------------------------------------------------------
@@ -435,6 +470,10 @@ class MultiTenantReplay:
             queues = blob["serving"]["queues"]
             for ts in self.tenants:
                 ts.queue = deque(queues.get(ts.cfg.function_id, []))
+        # The block cache is data-plane state: it never crossed the wire,
+        # but the restored manager needs the scorer re-attached.
+        if self.block_cache is not None:
+            self.mgr.set_content_affinity(self._image_affinity)
 
     def _failover(self) -> None:
         """Kill the scheduler: serialize, discard, restore from the wire copy.
@@ -459,6 +498,9 @@ class MultiTenantReplay:
     def _provision(self, ts: _TenantState, vm_id: str, now: float) -> None:
         cfg, w = self.cfg, self.cfg.wave
         fid = ts.cfg.function_id
+        if cfg.images is not None:
+            self._provision_blocks(ts, vm_id, now, cfg.images[fid])
+            return
         payload = int(w.image_bytes * w.startup_fraction)
         control = w.rpc.control_plane_total()
         if cfg.system == "faasnet":
@@ -502,6 +544,96 @@ class MultiTenantReplay:
                 self.sim.set_parent(states[0], up)  # type: ignore[arg-type]
         ts.flow_of[vm_id] = states[0]
 
+    def _provision_blocks(
+        self, ts: _TenantState, vm_id: str, now: float, img
+    ) -> None:
+        """Block-granular provisioning: per-layer flows, runnable-driven start.
+
+        The instance activates once the boot working set lands (§3.2); full
+        materialization continues in the background and is recorded in the
+        shared :class:`~repro.core.image.BlockCache`, where later waves of
+        ANY tenant sharing the base layers skip the resident blocks.  The
+        VM's cache is evicted when the VM returns to the free pool.
+        """
+        cfg, w = self.cfg, self.cfg.wave
+        fid = ts.cfg.function_id
+        cache = self.block_cache
+        control = w.rpc.control_plane_total()
+        upstream = None
+        if cfg.system == "faasnet":
+            upstream = self.mgr.insert(fid, vm_id, now)
+            streaming = True
+        elif cfg.system in ("baseline", "on_demand"):
+            streaming = cfg.system == "on_demand"
+            # keep the FT for height reporting + pool-partition parity
+            self.mgr.insert(fid, vm_id, now)
+        else:
+            raise ValueError(cfg.system)
+        flows: list[Flow] = []
+        for la in img.layers:
+            if cfg.system == "baseline":
+                # docker's layer cache is all-or-nothing; a container cannot
+                # start before the full pull
+                if cache.resident_blocks(vm_id, la.digest) >= img.layer_blocks(
+                    la.digest
+                ):
+                    continue
+                need, boot = la.size, la.size
+            else:
+                need, boot = cache.missing_layer_bytes(vm_id, img, la.digest)
+                if need <= 0:
+                    continue
+            src = (
+                upstream
+                if upstream is not None
+                else self.resolver.source_for(la.digest, nbytes=need)
+            )
+            flows.append(Flow(src, vm_id, la.digest, need, runnable_bytes=boot))
+        if not flows:
+            # fully cached: zero-byte marker so the milestones still fire
+            src = (
+                upstream
+                if upstream is not None
+                else self.resolver.source_for(img.name, nbytes=0)
+            )
+            flows.append(Flow(src, vm_id, f"{img.name}:cached", 0))
+        plan = DistributionPlan(
+            flows=flows, control_latency={vm_id: control}, streaming=streaming
+        )
+        ts.provisioning[vm_id] = now
+        ts.first_req_t = min(ts.first_req_t, now)
+        extract = (
+            img.total_bytes() / w.image_extract_rate
+            if cfg.system == "baseline"
+            else w.rpc.image_load
+        )
+        pending = len(plan.flows)
+
+        def on_runnable(vm: str, t: float) -> None:
+            ready = t + extract + w.container_start
+            self.sim.schedule(ready, lambda: self._activate(ts, vm, ready))
+
+        def on_done(vm: str, t: float) -> None:
+            nonlocal pending
+            pending -= 1
+            # last layer landed: the whole image is resident.  Skip the
+            # cache write if the instance was reclaimed before the stream
+            # finished — eviction wins over a straggling materialization.
+            if pending == 0 and (vm in ts.instances or vm in ts.provisioning):
+                cache.add_image(vm, img)
+
+        states = self.sim.add_plan(
+            plan, t0=now, on_node_done=on_done, on_node_runnable=on_runnable
+        )
+        if streaming and upstream is not None:
+            ups = ts.block_flow_of.get(upstream)
+            if ups:
+                for st in states:
+                    up = ups.get(st.flow.piece)
+                    if up is not None and not up.done:  # type: ignore[attr-defined]
+                        self.sim.set_parent(st, up)  # type: ignore[arg-type]
+        ts.block_flow_of[vm_id] = {st.flow.piece: st for st in states}
+
     def _activate(self, ts: _TenantState, vm_id: str, now: float) -> None:
         t_req = ts.provisioning.pop(vm_id, now)
         ts.prov_latencies.append(now - t_req)
@@ -538,7 +670,12 @@ class MultiTenantReplay:
                     ts.wasted += 1
                 del ts.instances[vm_id]
                 ts.flow_of.pop(vm_id, None)
-                self.mgr.reclaim_instance(fid, vm_id)
+                ts.block_flow_of.pop(vm_id, None)
+                released = self.mgr.reclaim_instance(fid, vm_id)
+                if released and self.block_cache is not None:
+                    # the VM returned to the free pool: its block cache
+                    # (every tenant's layers) goes with it
+                    self.block_cache.evict(vm_id)
 
     # ------------------------------------------------------------------
     def _step_tenant(self, ts: _TenantState, t: int, now: float) -> None:

@@ -26,7 +26,7 @@ from typing import Callable, Optional
 from repro.core.registry import is_registry_node, shard_index
 from repro.core.topology import DistributionPlan, Flow
 
-from .engine import SimConfig, plan_releases
+from .engine import SimConfig, plan_releases, wire_runnable
 
 
 @dataclass(eq=False)
@@ -45,6 +45,10 @@ class _RefFlowState:
     pipeline_delay: float = 0.0
     on_done: Optional[Callable[[float], None]] = None
     fid: int = -1  # index into the engine's flow list (rate-log key)
+    # Runnable-prefix milestone (paper §3.2); see engine._FlowState.
+    notify_bytes: float = 0.0
+    notified: bool = False
+    on_notify: Optional[Callable[[float], None]] = None
 
 
 class ReferenceFlowSim:
@@ -88,23 +92,25 @@ class ReferenceFlowSim:
         *,
         t0: float = 0.0,
         on_node_done: Optional[Callable[[str, float], None]] = None,
+        on_node_runnable: Optional[Callable[[str, float], None]] = None,
         coordinator_queues: Optional[dict[str, float]] = None,
     ) -> list[_RefFlowState]:
         """Register a provisioning wave starting at ``t0``."""
         cfg = self.cfg
         coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
-        by_dst: dict[str, _RefFlowState] = {}
+        by_dst: dict[tuple[str, str], _RefFlowState] = {}
         states: list[_RefFlowState] = []
         for fl, release, block_mode in plan_releases(plan, cfg, t0, coordinator_queues):
             st = _RefFlowState(flow=fl, remaining=float(fl.bytes), total=float(fl.bytes),
                                start_after=release, block_mode=block_mode)
             states.append(st)
-            # streaming dependency: dst of the parent flow == src of this flow
-            by_dst.setdefault(fl.dst, st)
+            # streaming dependency: dst of the parent flow == src of this
+            # flow, matched per piece (see FlowSim.add_plan)
+            by_dst.setdefault((fl.dst, fl.piece), st)
         if plan.streaming:
             block_t = cfg.block_size / cfg.vm_nic.in_cap
             for st in states:
-                up = by_dst.get(st.flow.src)
+                up = by_dst.get((st.flow.src, st.flow.piece))
                 if up is not None:
                     st.parent = up
                     st.start_after = max(st.start_after, t0)  # start gated below
@@ -119,6 +125,7 @@ class ReferenceFlowSim:
             st.fid = len(self._flows)
             self._flows.append(st)
             self._arm_start(st)
+        wire_runnable(self, states, on_node_runnable)
         return states
 
     def _arm_start(self, st: _RefFlowState) -> None:
@@ -222,8 +229,23 @@ class ReferenceFlowSim:
                     t = self.now + f.remaining / f.rate
                     if t < t_next_done:
                         t_next_done, next_flow = t, f
+            # next runnable-prefix landing (notify_bytes of a flow arrived)
+            t_next_noti = math.inf
+            noti_flow: Optional[_RefFlowState] = None
+            for f in self._flows:
+                if (
+                    f.started
+                    and not f.done
+                    and not f.notified
+                    and f.on_notify is not None
+                    and f.rate > 0
+                ):
+                    pend = f.notify_bytes - (f.total - f.remaining)
+                    t = self.now + max(0.0, pend) / f.rate
+                    if t < t_next_noti:
+                        t_next_noti, noti_flow = t, f
             t_next_evt = self._events[0][0] if self._events else math.inf
-            t_next = min(t_next_done, t_next_evt)
+            t_next = min(t_next_done, t_next_noti, t_next_evt)
             if t_next == math.inf or t_next > until:
                 if until != math.inf and until > self.now:
                     dt = until - self.now
@@ -238,10 +260,24 @@ class ReferenceFlowSim:
                 if f.started and not f.done:
                     f.remaining = max(0.0, f.remaining - f.rate * dt)
             self.now = t_next
-            if t_next_done <= t_next_evt and next_flow is not None:
+            if (
+                t_next_noti <= t_next_done
+                and t_next_noti <= t_next_evt
+                and noti_flow is not None
+            ):
+                # one notify per iteration, mirroring one completion per
+                # iteration (the scan picks the lowest fid at time ties)
+                noti_flow.notified = True
+                if noti_flow.on_notify is not None:
+                    noti_flow.on_notify(self.now)
+            elif t_next_done <= t_next_evt and next_flow is not None:
                 next_flow.done = True
                 next_flow.remaining = 0.0
                 next_flow.t_done = self.now
+                if next_flow.on_notify is not None and not next_flow.notified:
+                    # runnable <= done always: fire a straggling notify first
+                    next_flow.notified = True
+                    next_flow.on_notify(self.now)
                 if next_flow.on_done is not None:
                     next_flow.on_done(self.now)
             else:

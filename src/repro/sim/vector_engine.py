@@ -46,7 +46,7 @@ import numpy as np
 from repro.core.registry import is_registry_node, shard_index
 from repro.core.topology import DistributionPlan, Flow
 
-from .engine import SimConfig, plan_releases
+from .engine import SimConfig, plan_releases, wire_runnable
 
 __all__ = ["VectorFlowSim"]
 
@@ -65,8 +65,8 @@ class _VFlowState:
 
     __slots__ = (
         "flow", "total", "start_after", "block_mode", "pipeline_delay",
-        "on_done", "parent", "children", "waiters", "started", "done",
-        "t_start", "t_done", "depth", "fid", "_eng",
+        "on_done", "on_notify", "parent", "children", "waiters", "started",
+        "done", "t_start", "t_done", "depth", "fid", "_eng",
     )
 
     def __init__(self, flow: Flow, total: float, start_after: float,
@@ -77,6 +77,7 @@ class _VFlowState:
         self.block_mode = block_mode
         self.pipeline_delay = 0.0
         self.on_done: Optional[Callable[[float], None]] = None
+        self.on_notify: Optional[Callable[[float], None]] = None
         self.parent: Optional["_VFlowState"] = None
         self.children: list["_VFlowState"] = []
         self.waiters: list["_VFlowState"] = []
@@ -103,6 +104,24 @@ class _VFlowState:
     @property
     def epoch(self) -> int:
         return int(self._eng._epoch[self.fid])
+
+    # Runnable-prefix milestone (paper §3.2): the threshold and its pending
+    # flag live in the engine arrays so the vectorized recompute can batch
+    # over them; ``wire_runnable`` writes through this property.
+    @property
+    def notify_bytes(self) -> float:
+        return float(self._eng._fnoti[self.fid])
+
+    @notify_bytes.setter
+    def notify_bytes(self, v: float) -> None:
+        self._eng._fnoti[self.fid] = v
+        self._eng._fhasnoti[self.fid] = v > 0.0
+
+    @property
+    def notified(self) -> bool:
+        return bool(
+            self.on_notify is not None and not self._eng._fhasnoti[self.fid]
+        )
 
 
 def _grown(arr: np.ndarray, cap: int) -> np.ndarray:
@@ -150,6 +169,9 @@ class VectorFlowSim:
         self._epoch = np.zeros(cap, dtype=_I64)
         self._fstarted = np.zeros(cap, dtype=bool)
         self._fdone = np.zeros(cap, dtype=bool)
+        self._ftot = np.zeros(cap, dtype=_F64)  # total bytes (notify math)
+        self._fnoti = np.zeros(cap, dtype=_F64)  # runnable-prefix threshold
+        self._fhasnoti = np.zeros(cap, dtype=bool)  # notify armed + unfired
         # Node arrays ----------------------------------------------------------
         ncap = 256
         self._ncap = ncap
@@ -166,6 +188,7 @@ class VectorFlowSim:
         self._vm_in = np.zeros(ncap, dtype=_F64)
         # Completion heap + dirty state ---------------------------------------
         self._done_heap: list[tuple[float, int, int]] = []  # (t_finish, fid, epoch)
+        self._notify_heap: list[tuple[float, int, int]] = []  # (t_prefix, fid, epoch)
         self._n_active = 0
         self._dirty_nodes: set[int] = set()
         self._dirty_fids: set[int] = set()
@@ -210,6 +233,9 @@ class VectorFlowSim:
         self._epoch = _grown(self._epoch, cap)
         self._fstarted = _grown(self._fstarted, cap)
         self._fdone = _grown(self._fdone, cap)
+        self._ftot = _grown(self._ftot, cap)
+        self._fnoti = _grown(self._fnoti, cap)
+        self._fhasnoti = _grown(self._fhasnoti, cap)
 
     def _grow_nodes(self, need: int) -> None:
         if need <= self._ncap:
@@ -328,22 +354,24 @@ class VectorFlowSim:
         *,
         t0: float = 0.0,
         on_node_done: Optional[Callable[[str, float], None]] = None,
+        on_node_runnable: Optional[Callable[[str, float], None]] = None,
         coordinator_queues: Optional[dict[str, float]] = None,
     ) -> list[_VFlowState]:
         """Register a provisioning wave starting at ``t0``."""
         cfg = self.cfg
         coordinator_queues = coordinator_queues if coordinator_queues is not None else {}
-        by_dst: dict[str, _VFlowState] = {}
+        by_dst: dict[tuple[str, str], _VFlowState] = {}
         states: list[_VFlowState] = []
         for fl, release, block_mode in plan_releases(plan, cfg, t0, coordinator_queues):
             st = _VFlowState(fl, float(fl.bytes), release, block_mode, self)
             states.append(st)
-            # streaming dependency: dst of the parent flow == src of this flow
-            by_dst.setdefault(fl.dst, st)
+            # streaming dependency: dst of the parent flow == src of this
+            # flow, matched per piece (see FlowSim.add_plan)
+            by_dst.setdefault((fl.dst, fl.piece), st)
         if plan.streaming:
             block_t = cfg.block_size / cfg.vm_nic.in_cap
             for st in states:
-                up = by_dst.get(st.flow.src)
+                up = by_dst.get((st.flow.src, st.flow.piece))
                 if up is not None:
                     self.set_parent(st, up)
                     st.start_after = max(st.start_after, t0)  # start gated below
@@ -366,6 +394,7 @@ class VectorFlowSim:
                 self._fpar[st.fid] = st.parent.fid
         for st in states:
             self._arm_start(st)
+        wire_runnable(self, states, on_node_runnable)
         if not self._in_run and len(self._ev_pending) > 2048:
             self._fold_events()  # sort bulk releases outside the timed run
         return states
@@ -380,6 +409,7 @@ class VectorFlowSim:
         self._fdep[fid] = st.depth
         self._fblk[fid] = st.block_mode
         self._rem[fid] = st.total
+        self._ftot[fid] = st.total
 
     def _arm_start(self, st: _VFlowState) -> None:
         if st.parent is not None and not st.parent.started:
@@ -562,6 +592,19 @@ class VectorFlowSim:
                 for t, fid, e, p in zip(est.tolist(), ch_l, ep_l, pos_r.tolist())
                 if p
             ]
+            nmask = self._fhasnoti[ch] & pos_r
+            if nmask.any():
+                # prefix-landing estimate under the new rate; a threshold
+                # already passed clamps to "due now" (mirror of FlowSim)
+                nj = np.flatnonzero(nmask)
+                chn = ch[nj]
+                pend = self._fnoti[chn] - (self._ftot[chn] - self._rem[chn])
+                nt = self._tlast[chn] + np.maximum(0.0, pend) / r_new[nj]
+                nheap = self._notify_heap
+                for t, fid, e in zip(
+                    nt.tolist(), chn.tolist(), self._epoch[chn].tolist()
+                ):
+                    heapq.heappush(nheap, (t, fid, e))
             # A parent-rate change propagates down the streaming chain.
             next_chunk: list[int] = []
             for fid in ch_l:
@@ -662,6 +705,8 @@ class VectorFlowSim:
         reg = self._reg_out
         vm_out, vm_in = self._vm_out, self._vm_in
         heap = self._done_heap
+        nheap = self._notify_heap
+        hasn, fnoti, ftot = self._fhasnoti, self._fnoti, self._ftot
         record = self.record_rates
         next_chunk: list[int] = []
         for i, fid in enumerate(fl):
@@ -701,6 +746,11 @@ class VectorFlowSim:
             ep_a[fid] = e
             if r > 0.0:
                 heapq.heappush(heap, (tl + rem_l[i] / r, fid, e))
+                if hasn[fid]:
+                    # prefix-landing estimate under the new rate; clamps to
+                    # "due now" when the threshold has already passed
+                    pend = float(fnoti[fid]) - (float(ftot[fid]) - rem_l[i])
+                    heapq.heappush(nheap, (tl + max(0.0, pend) / r, fid, e))
             if record:
                 self.rate_log.append((now, fid, r))
             # A parent-rate change propagates down the streaming chain.
@@ -729,6 +779,27 @@ class VectorFlowSim:
         while heap:
             t, fid, epoch = heap[0]
             if fdone[fid] or not fstarted[fid] or epoch != ep[fid]:
+                heapq.heappop(heap)
+                continue
+            return t
+        return math.inf
+
+    def _next_notify(self) -> float:
+        """Earliest valid runnable-prefix time (same lazy invalidation)."""
+        heap = self._notify_heap
+        fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+        hasn = self._fhasnoti
+        if len(heap) > max(64, 4 * self._n_active):
+            heap = [
+                e for e in heap
+                if fstarted[e[1]] and not fdone[e[1]] and hasn[e[1]]
+                and e[2] == ep[e[1]]
+            ]
+            heapq.heapify(heap)
+            self._notify_heap = heap
+        while heap:
+            t, fid, epoch = heap[0]
+            if fdone[fid] or not fstarted[fid] or not hasn[fid] or epoch != ep[fid]:
                 heapq.heappop(heap)
                 continue
             return t
@@ -828,19 +899,45 @@ class VectorFlowSim:
                 if self._dirty_nodes or self._dirty_fids:
                     self._recompute()
                 t_done = self._next_completion()
+                t_noti = self._next_notify()
                 t_evt = evh[0][0] if evh else math.inf
                 if self._sptr < len(self._spay):
                     ts = self._sts[self._sptr]
                     if ts < t_evt:
                         t_evt = ts
-                t_next = min(t_done, t_evt)
+                t_next = min(t_done, t_noti, t_evt)
                 if t_next == math.inf or t_next > until:
                     if until != math.inf and until > self.now:
                         self.now = until
                         self._settle_active()
                     return self.now
                 self.now = t_next
-                if t_done <= t_evt:
+                if t_noti <= t_done and t_noti <= t_evt:
+                    # Runnable prefixes land before (or exactly at) the flow's
+                    # own completion — fire every notify due at this instant
+                    # in deterministic (time, fid) order, then loop.
+                    nheap = self._notify_heap
+                    fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+                    hasn = self._fhasnoti
+                    while nheap:
+                        t, fid, epoch = nheap[0]
+                        if (
+                            fdone[fid]
+                            or not fstarted[fid]
+                            or not hasn[fid]
+                            or epoch != ep[fid]
+                        ):
+                            heapq.heappop(nheap)
+                            continue
+                        if t > self.now:
+                            break
+                        heapq.heappop(nheap)
+                        hasn[fid] = False
+                        self.events_processed += 1
+                        st = flows[fid]
+                        if st.on_notify is not None:
+                            st.on_notify(self.now)
+                elif t_done <= t_evt:
                     # Batch every completion due at this instant into one
                     # settle pass: mark them all done first, then fire
                     # callbacks in deterministic (time, fid) order, then
@@ -859,6 +956,17 @@ class VectorFlowSim:
                         else:
                             break
                     self._complete_batch(batch)
+                    # A completed flow's prefix landed by definition: fire
+                    # any notify that has not gone out yet (runnable <= done
+                    # always), before the done callbacks.
+                    hasn = self._fhasnoti
+                    for fid in batch:
+                        if hasn[fid]:
+                            hasn[fid] = False
+                            self.events_processed += 1
+                            st = flows[fid]
+                            if st.on_notify is not None:
+                                st.on_notify(self.now)
                     for fid in batch:
                         st = flows[fid]
                         if st.on_done is not None:

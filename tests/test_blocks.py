@@ -1,0 +1,455 @@
+"""Block-level provisioning: image model, cache-aware plans, runnable milestone.
+
+Covers the §3.1–§3.2 block/layer path end to end:
+
+  * :class:`~repro.core.image.ImageSpec` geometry — block counts, boot
+    working-set prefixes, Fig. 20 read amplification;
+  * :class:`~repro.core.image.BlockCache` — max-merge prefixes, eviction,
+    missing-bytes math the plan builders consume;
+  * the block plan builders — resident blocks never travel, fully cached
+    nodes still get their milestone via a zero-byte marker flow;
+  * the ``on_node_runnable`` milestone — blocks ON, the three engines
+    (incremental / vector / reference) stay equivalent: incremental ==
+    vector bit-identical, reference within 1e-9;
+  * the harnesses — ``block_wave`` warm-cache reuse, ``run_scale`` with
+    images, multi-tenant replay with block provisioning + failover parity,
+    and content-aware root election in the FTManager.
+
+Blocks OFF (``image(s)=None``, the default) is pinned bit-identical to the
+legacy scalar goldens by the existing suites — nothing here re-tests that.
+"""
+import pytest
+
+from repro.core import (
+    BlockCache,
+    FTManager,
+    FunctionTree,
+    ImageSpec,
+    LayerSpec,
+    VMInfo,
+    baseline_block_plan,
+    disjoint_images,
+    faasnet_block_plan,
+    on_demand_block_plan,
+    shared_base_images,
+)
+from repro.sim import (
+    MultiTenantReplay,
+    ScaleConfig,
+    WaveConfig,
+    block_wave,
+    multi_tenant_config,
+    provision_wave,
+    run_scale,
+)
+from repro.sim.engine import FlowSim, SimConfig
+from repro.sim.reference import ReferenceFlowSim
+from repro.sim.vector_engine import VectorFlowSim
+
+MB = 1 << 20
+REL_TOL = 1e-9
+
+
+def _close(a: float, b: float) -> bool:
+    return abs(a - b) <= REL_TOL * max(1.0, abs(a), abs(b))
+
+
+# ----------------------------------------------------------------------
+# ImageSpec geometry
+# ----------------------------------------------------------------------
+def _img(block_size=MB, boot_fraction=0.15, sizes=(10 * MB, 5 * MB + 1)):
+    layers = tuple(LayerSpec(f"L{i}", s) for i, s in enumerate(sizes))
+    return ImageSpec("img", layers, block_size=block_size, boot_fraction=boot_fraction)
+
+
+def test_image_block_geometry():
+    img = _img()
+    assert img.total_bytes() == 15 * MB + 1
+    assert img.layer_blocks("L0") == 10
+    assert img.layer_blocks("L1") == 6  # 5 MiB + 1 byte -> 6 blocks
+    g = img.geometry("L1")
+    assert g.raw_size == 5 * MB + 1
+    assert img.prefix_bytes("L1", 6) == 5 * MB + 1  # tail block is short
+    assert img.prefix_bytes("L1", 2) == 2 * MB
+    assert img.prefix_bytes("L1", 0) == 0
+
+
+def test_boot_working_set_is_front_to_back_prefix():
+    img = _img(boot_fraction=0.5)  # budget ~7.5 MiB: all in L0
+    bb = img.boot_blocks()
+    assert bb["L0"] == 8  # ceil(7.5 MiB / 1 MiB) covering blocks
+    assert bb["L1"] == 0
+    assert img.boot_prefix_bytes("L0") == 8 * MB
+    assert img.boot_prefix_bytes("L1") == 0
+
+
+def test_read_amplification_grows_with_block_size():
+    # Fig. 20: bigger blocks round the boot edge up further.
+    sizes = (64 * MB, 64 * MB, 32 * MB)
+    amps = []
+    for bs in (128 * 1024, 512 * 1024, 2 * MB, 8 * MB):
+        img = ImageSpec(
+            "a", tuple(LayerSpec(f"L{i}", s) for i, s in enumerate(sizes)),
+            block_size=bs, boot_fraction=0.17,
+        )
+        amps.append(img.boot_read_amplification())
+    assert all(a >= 1.0 for a in amps)
+    assert amps == sorted(amps), f"not monotone: {amps}"
+    assert amps[-1] > amps[0]
+
+
+def test_image_validation():
+    with pytest.raises(ValueError):
+        ImageSpec("e", ())
+    with pytest.raises(ValueError):
+        ImageSpec("e", (LayerSpec("a", 1),), block_size=0)
+    with pytest.raises(ValueError):
+        ImageSpec("e", (LayerSpec("a", 1),), boot_fraction=0.0)
+    with pytest.raises(ValueError):
+        ImageSpec("e", (LayerSpec("a", 1), LayerSpec("a", 2)))
+    with pytest.raises(ValueError):
+        LayerSpec("neg", -1)
+
+
+def test_shared_base_images_share_digests():
+    imgs = shared_base_images(6, 2, image_bytes=100 * MB)
+    assert len(imgs) == 6
+    # fn0 and fn2 share base0's layers; fn0 and fn1 share nothing but names
+    assert [la.digest for la in imgs[0].layers[:-1]] == [
+        la.digest for la in imgs[2].layers[:-1]
+    ]
+    assert set(la.digest for la in imgs[0].layers[:-1]).isdisjoint(
+        la.digest for la in imgs[1].layers[:-1]
+    )
+    assert imgs[0].layers[-1].digest != imgs[2].layers[-1].digest
+    dis = disjoint_images(4, image_bytes=100 * MB)
+    all_digests = [la.digest for im in dis for la in im.layers]
+    assert len(all_digests) == len(set(all_digests))
+
+
+# ----------------------------------------------------------------------
+# BlockCache
+# ----------------------------------------------------------------------
+def test_block_cache_max_merge_and_evict():
+    img = _img()
+    c = BlockCache()
+    assert c.resident_blocks("vm0", "L0") == 0
+    c.add_prefix("vm0", "L0", 4)
+    c.add_prefix("vm0", "L0", 2)  # max-merge: never shrinks
+    assert c.resident_blocks("vm0", "L0") == 4
+    c.add_prefix("vm0", "L0", 0)  # no-op
+    assert c.resident_blocks("vm0", "L0") == 4
+    assert c.resident_bytes("vm0", img) == 4 * MB
+    c.add_image("vm0", img)
+    assert c.resident_bytes("vm0", img) == img.total_bytes()
+    c.evict("vm0")
+    assert c.resident_bytes("vm0", img) == 0
+
+
+def test_missing_layer_bytes():
+    img = _img(boot_fraction=0.5)  # boot: 8 blocks of L0, 0 of L1
+    c = BlockCache()
+    full, boot = c.missing_layer_bytes("vm0", img, "L0")
+    assert (full, boot) == (10 * MB, 8 * MB)
+    c.add_prefix("vm0", "L0", 3)
+    full, boot = c.missing_layer_bytes("vm0", img, "L0")
+    assert (full, boot) == (7 * MB, 5 * MB)
+    c.add_prefix("vm0", "L0", 10)
+    assert c.missing_layer_bytes("vm0", img, "L0") == (0, 0)
+    assert c.missing_layer_bytes("vm0", img, "L1") == (5 * MB + 1, 0)
+
+
+# ----------------------------------------------------------------------
+# Plan builders
+# ----------------------------------------------------------------------
+def test_faasnet_block_plan_skips_resident_blocks():
+    imgs = shared_base_images(2, 1, image_bytes=64 * MB)
+    cache = BlockCache()
+    cache.add_image("vm0", imgs[0])  # vm0 holds fn0 entirely (shares base w/ fn1)
+    ft = FunctionTree("fn1")
+    for vm in ("vm0", "vm1"):
+        ft.insert(vm)
+    plan = faasnet_block_plan(ft, image=imgs[1], cache=cache)
+    by_dst = {}
+    for fl in plan.flows:
+        by_dst.setdefault(fl.dst, []).append(fl)
+    # vm0 only needs fn1's private app layer; base layers never travel
+    assert [f.piece for f in by_dst["vm0"]] == ["fn1:app"]
+    # vm1 (cold) pulls every layer, chained under vm0
+    assert len(by_dst["vm1"]) == len(imgs[1].layers)
+    assert all(f.src == "vm0" for f in by_dst["vm1"])
+    assert plan.streaming
+    # runnable prefix never exceeds the flow's payload
+    for fl in plan.flows:
+        assert 0 <= fl.runnable_bytes <= fl.bytes
+
+
+def test_fully_cached_node_gets_marker_flow():
+    img = _img()
+    cache = BlockCache()
+    cache.add_image("vm0", img)
+    plan = on_demand_block_plan(["vm0"], image=img, cache=cache)
+    assert len(plan.flows) == 1
+    assert plan.flows[0].bytes == 0
+    assert plan.flows[0].piece == "img:cached"
+    # milestones still fire: both runnable and done
+    sim = FlowSim(SimConfig())
+    seen = {}
+    sim.add_plan(
+        plan,
+        on_node_done=lambda vm, t: seen.setdefault(("done", vm), t),
+        on_node_runnable=lambda vm, t: seen.setdefault(("run", vm), t),
+    )
+    sim.run()
+    assert ("done", "vm0") in seen and ("run", "vm0") in seen
+    assert seen[("run", "vm0")] <= seen[("done", "vm0")]
+
+
+def test_baseline_block_plan_is_all_or_nothing():
+    img = _img()
+    cache = BlockCache()
+    cache.add_prefix("vm0", "L0", 5)  # partial: docker re-pulls the whole layer
+    plan = baseline_block_plan(["vm0"], image=img, cache=cache)
+    sizes = {f.piece: f.bytes for f in plan.flows}
+    assert sizes["L0"] == 10 * MB
+    # runnable == full arrival for docker pull
+    assert all(f.runnable_bytes == f.bytes for f in plan.flows)
+    assert not plan.streaming
+    cache.add_prefix("vm0", "L0", 10)  # fully cached: skipped
+    plan2 = baseline_block_plan(["vm0"], image=img, cache=cache)
+    assert "L0" not in {f.piece for f in plan2.flows}
+
+
+# ----------------------------------------------------------------------
+# Engine differential: blocks ON, three engines agree
+# ----------------------------------------------------------------------
+def _run_engine(make, imgs, cache_warm):
+    sim = make(SimConfig(record_trace=True))
+    cache = BlockCache()
+    if cache_warm:
+        cache.add_image("seed", imgs[0])
+    runnable, done = {}, {}
+    for i, img in enumerate(imgs):
+        ft = FunctionTree(img.name)
+        for v in (f"f{i}a", f"f{i}b", f"f{i}c"):
+            ft.insert(v)
+        plan = faasnet_block_plan(ft, image=img, cache=cache)
+        sim.add_plan(
+            plan,
+            t0=0.01 * i,
+            on_node_done=lambda vm, t, i=i: done.__setitem__(
+                (i, vm), max(done.get((i, vm), 0.0), t)
+            ),
+            on_node_runnable=lambda vm, t, i=i: runnable.setdefault((i, vm), t),
+        )
+    sim.run()
+    return runnable, done, sim.now, getattr(sim, "events_processed", None)
+
+
+@pytest.mark.parametrize("cache_warm", [False, True])
+def test_blocks_on_engine_differential(cache_warm):
+    imgs = shared_base_images(6, 2, image_bytes=48 * MB)
+    inc = _run_engine(FlowSim, imgs, cache_warm)
+    vec = _run_engine(VectorFlowSim, imgs, cache_warm)
+    ref = _run_engine(ReferenceFlowSim, imgs, cache_warm)
+    # incremental == vector: bit-identical milestones, clock and event count
+    assert inc == vec
+    # reference agrees within 1e-9 on every milestone
+    for key in ("runnable", "done"):
+        a = inc[0] if key == "runnable" else inc[1]
+        b = ref[0] if key == "runnable" else ref[1]
+        assert a.keys() == b.keys()
+        for k in a:
+            assert _close(a[k], b[k]), (key, k, a[k], b[k])
+    assert _close(inc[2], ref[2])
+    # runnable never trails full arrival
+    for k, t in inc[0].items():
+        assert t <= inc[1][k] + REL_TOL
+
+
+def test_runnable_fires_before_done_on_cold_fetch():
+    img = _img(boot_fraction=0.15, sizes=(64 * MB, 16 * MB))
+    plan = on_demand_block_plan(["vm0"], image=img)
+    sim = FlowSim(SimConfig())
+    seen = {}
+    sim.add_plan(
+        plan,
+        on_node_done=lambda vm, t: seen.__setitem__("done", max(seen.get("done", 0.0), t)),
+        on_node_runnable=lambda vm, t: seen.setdefault("run", t),
+    )
+    sim.run()
+    assert 0.0 < seen["run"] < seen["done"]
+
+
+# ----------------------------------------------------------------------
+# block_wave harness
+# ----------------------------------------------------------------------
+def test_block_wave_warm_cache_speeds_second_wave():
+    imgs = shared_base_images(2, 1, image_bytes=128 * MB)
+    cache = BlockCache()
+    cold = block_wave("faasnet", 4, images=imgs[0], cache=cache)
+    warm = block_wave("faasnet", 4, images=imgs[1], cache=cache)
+    cold_done = max(v["done"] for v in cold.values())
+    warm_done = max(v["done"] for v in warm.values())
+    assert warm_done < cold_done  # base layers resident: only the app layer moves
+    for v in list(cold.values()) + list(warm.values()):
+        assert v["runnable"] <= v["done"]
+
+
+def test_block_wave_engines_agree():
+    img = shared_base_images(1, 1, image_bytes=64 * MB)[0]
+    runs = {
+        eng: block_wave("faasnet", 8, WaveConfig(engine=eng), images=img)
+        for eng in ("incremental", "vector")
+    }
+    assert runs["incremental"] == runs["vector"]
+    ref = block_wave("faasnet", 8, WaveConfig(engine="reference"), images=img)
+    for vm, v in runs["incremental"].items():
+        assert _close(v["runnable"], ref[vm]["runnable"])
+        assert _close(v["done"], ref[vm]["done"])
+
+
+def test_block_wave_systems_and_validation():
+    img = _img(sizes=(32 * MB, 8 * MB))
+    for system in ("faasnet", "on_demand", "baseline"):
+        res = block_wave(system, 4, images=img)
+        assert len(res) == 4
+        for v in res.values():
+            assert 0.0 < v["runnable"] <= v["done"]
+    base = block_wave("baseline", 4, images=img)
+    # docker pull: runnable == done (plus identical extract tail) per VM
+    for v in base.values():
+        assert _close(v["runnable"], v["done"])
+    with pytest.raises(ValueError):
+        block_wave("faasnet", 4)  # no image anywhere
+    with pytest.raises(ValueError):
+        block_wave("faasnet", 4, images=[img] * 3)  # wrong per-VM list length
+    with pytest.raises(ValueError):
+        block_wave("kraken", 2, images=img)  # not a block system
+
+
+def test_provision_wave_delegates_to_block_path():
+    img = _img(sizes=(32 * MB, 8 * MB))
+    cfg = WaveConfig(image=img)
+    lat = provision_wave("faasnet", 4, cfg)
+    direct = block_wave("faasnet", 4, WaveConfig(), images=img)
+    assert lat == {vm: v["runnable"] for vm, v in direct.items()}
+    with pytest.raises(ValueError):
+        provision_wave("faasnet", 4, WaveConfig(image=img), warm_roots=1)
+
+
+# ----------------------------------------------------------------------
+# run_scale with images
+# ----------------------------------------------------------------------
+def test_run_scale_blocks_runnable_before_done():
+    imgs = shared_base_images(3, 1, image_bytes=64 * MB)
+    cfg = ScaleConfig(
+        n_vms=24, n_functions=3, containers_per_function=8, images=imgs
+    )
+    res = run_scale(cfg)
+    assert 0.0 < res.runnable_makespan < res.makespan
+    vec = run_scale(
+        ScaleConfig(
+            n_vms=24, n_functions=3, containers_per_function=8, images=imgs,
+            wave=WaveConfig(engine="vector"),
+        )
+    )
+    assert vec.runnable_makespan == res.runnable_makespan
+    assert vec.makespan == res.makespan
+    with pytest.raises(ValueError):
+        run_scale(ScaleConfig(n_functions=3, images=imgs[:2]))
+
+
+# ----------------------------------------------------------------------
+# Content-aware root election
+# ----------------------------------------------------------------------
+def _mgr(n_vms=8, **kw):
+    m = FTManager(**kw)
+    for i in range(n_vms):
+        m.add_free_vm(VMInfo(f"vm{i}"))
+    return m
+
+
+def test_content_root_election_prefers_warm_vm():
+    imgs = shared_base_images(2, 1, image_bytes=64 * MB)
+    cache = BlockCache()
+    cache.add_image("vm3", imgs[0])  # vm3 holds fn0 (shares base with fn1)
+    m = _mgr()
+    m.set_content_affinity(
+        lambda fid, vm: cache.resident_bytes(vm, imgs[int(fid[2:])])
+    )
+    root = m.pick_vm_for("fn1", now=0.0)
+    assert root.vm_id == "vm3"
+    assert m.stats["content_roots"] == 1
+    assert "vm3" not in m.free_pool  # promoted out of the free pool
+    m.insert("fn1", root.vm_id, 0.0)
+    # tree exists now: affinity no longer applies to scale-out picks
+    second = m.pick_vm_for("fn1", now=0.0)
+    assert second.vm_id != "vm3"
+    assert m.stats["content_roots"] == 1
+
+
+def test_content_root_election_cold_falls_back():
+    m = _mgr(4)
+    m.set_content_affinity(lambda fid, vm: 0)
+    v = m.pick_vm_for("fn0", now=0.0)
+    assert v.vm_id == "vm0"  # plain FIFO reservation
+    assert m.stats["content_roots"] == 0
+
+
+# ----------------------------------------------------------------------
+# Multi-tenant replay with block provisioning
+# ----------------------------------------------------------------------
+def _mt_cfg(images, **kw):
+    cfg = multi_tenant_config(
+        n_tenants=len(images), vm_pool_size=60, minutes=2, **kw
+    )
+    cfg.images = {
+        t.function_id: img for t, img in zip(cfg.tenants, images)
+    }
+    return cfg
+
+
+def test_multi_tenant_blocks_complete_and_deterministic():
+    imgs = shared_base_images(3, 1, image_bytes=48 * MB)
+    a = MultiTenantReplay(_mt_cfg(imgs, failover_at=None, check_partition=True)).run()
+    b = MultiTenantReplay(_mt_cfg(imgs, failover_at=None, check_partition=True)).run()
+    assert a.timelines == b.timelines
+    assert all(t.provisioned > 0 for t in a.per_tenant.values())
+    assert all(t.mean_prov_s > 0 for t in a.per_tenant.values())
+
+
+def test_multi_tenant_blocks_failover_parity():
+    imgs = shared_base_images(3, 1, image_bytes=48 * MB)
+    broken = MultiTenantReplay(
+        _mt_cfg(imgs, failover_at=45, check_partition=True)
+    ).run()
+    unbroken = MultiTenantReplay(
+        _mt_cfg(imgs, failover_at=None, check_partition=True)
+    ).run()
+    assert broken.failovers == 1
+    assert broken.timelines == unbroken.timelines
+
+
+def test_multi_tenant_blocks_missing_tenant_rejected():
+    imgs = shared_base_images(2, 1, image_bytes=48 * MB)
+    cfg = _mt_cfg(imgs, failover_at=None)
+    del cfg.images[cfg.tenants[0].function_id]
+    with pytest.raises(ValueError):
+        MultiTenantReplay(cfg)
+
+
+def test_multi_tenant_reclaim_evicts_block_cache():
+    imgs = shared_base_images(1, 1, image_bytes=48 * MB)
+    cfg = _mt_cfg(imgs, failover_at=None)
+    cfg.idle_reclaim_s = 20.0
+    # idle tail so instances get reclaimed mid-run
+    t = cfg.tenants[0]
+    t.trace[:] = [4.0] * 30 + [0.0] * (len(t.trace) - 30)
+    rep = MultiTenantReplay(cfg)
+    res = rep.run()
+    assert res.manager_stats["reclaims"] > 0
+    img = cfg.images[t.function_id]
+    for vm_id in rep.mgr.vms:
+        if vm_id in rep.mgr.free_pool:
+            assert rep.block_cache.resident_bytes(vm_id, img) == 0

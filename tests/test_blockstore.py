@@ -228,6 +228,106 @@ def test_coalesced_stats_match_per_block_path(tmp_path):
     assert a.stats.amplification() == b.stats.amplification()
 
 
+# ----------------------------------------------------------------------
+# PR 8: guard + codec-default bugfixes, edge-case coverage
+# ----------------------------------------------------------------------
+def test_negative_length_rejected(tmp_path):
+    """Regression: read_range(5, -3) used to pass the guard and *decrement*
+    useful_bytes, corrupting amplification()."""
+    payload = os.urandom(10_000)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=1024)
+    r = BlockReader(path)
+    r.read_range(0, 1000)
+    before = r.stats.useful_bytes
+    with pytest.raises(ValueError):
+        r.read_range(5, -3)
+    assert r.stats.useful_bytes == before  # stats untouched by the rejection
+    assert r.read_range(5, 0) == b""  # zero length stays a valid no-op
+
+
+def test_default_level_is_per_codec(tmp_path, monkeypatch):
+    """Regression: level defaulted to zstd's 3 and was forced onto the zlib
+    fallback, under-compressing vs _ZlibCodec's documented default 6."""
+    from repro.core import blockstore as bs
+
+    payload = (bytes(range(256)) * 2000) + os.urandom(100_000)
+    default = str(tmp_path / "default.blocks")
+    pinned6 = str(tmp_path / "pinned6.blocks")
+    m_default = write_blockstore(payload, default, block_size=64 * 1024, codec="zlib")
+    m_pinned = write_blockstore(
+        payload, pinned6, block_size=64 * 1024, codec="zlib", level=6
+    )
+    # zlib default is 6: an unpinned write must match an explicit level-6 one
+    # (the old code silently wrote level 3 here).
+    assert m_default.offsets == m_pinned.offsets
+    import zlib
+
+    blob = payload[: 64 * 1024]
+    assert m_default.block_compressed_size(0) == len(zlib.compress(blob, 6))
+    if have_zstd():
+        m_zstd = write_blockstore(payload, str(tmp_path / "z.blocks"), block_size=64 * 1024, codec="zstd")
+        m_zstd3 = write_blockstore(
+            payload, str(tmp_path / "z3.blocks"), block_size=64 * 1024, codec="zstd", level=3
+        )
+        assert m_zstd.offsets == m_zstd3.offsets  # zstd default is 3
+
+
+def test_empty_payload_roundtrip(tmp_path):
+    path = str(tmp_path / "empty.blocks")
+    m = write_blockstore(b"", path, block_size=1024)
+    assert m.raw_size == 0
+    assert m.n_blocks == 1  # format always carries >= 1 block
+    r = BlockReader(path)
+    assert r.read_all() == b""
+    assert r.read_range(0, 0) == b""
+
+
+def test_read_range_at_exact_block_boundaries(tmp_path):
+    payload = bytes(range(256)) * 64  # 16 KiB
+    bs = 4096
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=bs)
+    r = BlockReader(path)
+    # exactly one block, starting on a boundary
+    assert r.read_range(bs, bs) == payload[bs : 2 * bs]
+    assert r.stats.blocks_fetched == 1
+    # range ending exactly on a boundary must not touch the next block
+    r2 = BlockReader(path)
+    assert r2.read_range(0, bs) == payload[:bs]
+    assert r2.stats.blocks_fetched == 1
+    # one byte past the boundary pulls exactly one extra block
+    r3 = BlockReader(path)
+    assert r3.read_range(0, bs + 1) == payload[: bs + 1]
+    assert r3.stats.blocks_fetched == 2
+
+
+def test_closed_reader_read_range_raises(tmp_path):
+    payload = os.urandom(10_000)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=1024)
+    r = BlockReader(path)
+    r.close()
+    with pytest.raises(ValueError):
+        r.read_range(0, 100)
+
+
+def test_fetch_run_splits_on_cached_hole(tmp_path):
+    """_fetch_run over [0..9] with block 5 cached must issue two coalesced
+    file reads (0-4 and 6-9), not ten."""
+    payload = os.urandom(10 * 4096)
+    path = str(tmp_path / "p.blocks")
+    write_blockstore(payload, path, block_size=4096)
+    r = BlockReader(path)
+    r.get_block(5)
+    reads_before = r.file_reads
+    r._fetch_run(0, 9)
+    assert r.file_reads - reads_before == 2
+    assert r.stats.blocks_fetched == 10
+    assert r.read_range(0, len(payload)) == payload  # all cached now
+    assert r.stats.blocks_fetched == 10  # and no refetches
+
+
 def test_reader_close_and_context_manager(tmp_path):
     payload = os.urandom(50_000)
     path = str(tmp_path / "p.blocks")
