@@ -26,10 +26,15 @@ the events/s trajectory the README's engine table quotes.  ``--giga``
 appends the 100k-VM / 1M-container burst-train tier
 (``repro.sim.scale.giga_burst_config``), vector-only: the incremental
 engine takes that tier at ~20k events/s, so it is benchmarked at the mega
-tier and the giga block records the vector speedup against it.
+tier and the giga block records the vector speedup against it.  The burst's
+events/s is asserted against ``--min-giga-evs`` (a regression gate, set at
+a floor this hardware actually clears), and the tier also runs
+``giga_replay_config`` — the full serving + block-provisioning trace replay
+against the same 100k-VM fleet — recorded as ``giga_replay``.
 ``--profile`` wraps the main run in cProfile and prints the top-15
-cumulative hotspots so engine regressions are diagnosable without ad-hoc
-scripts.
+cumulative hotspots plus a ``_fold_events``/``_compact_done_heap``
+queue-maintenance microbenchmark so engine regressions are diagnosable
+without ad-hoc scripts.
 
 Every run additionally records a control-plane microbenchmark: building one
 10,000-node FunctionTree via ``FTManager.bulk_insert`` (``ft_build_s``),
@@ -47,7 +52,7 @@ import time
 
 
 def _result_dict(cfg, res) -> dict:
-    return {
+    d = {
         "engine": res.engine,
         "n_vms": cfg.n_vms,
         "n_functions": cfg.n_functions,
@@ -72,6 +77,12 @@ def _result_dict(cfg, res) -> dict:
             fid: st["height"] for fid, st in sorted(res.tree_stats.items())
         },
     }
+    if res.dispatch_stats:
+        # Vector engines: scalar-vs-vector front counts, the front-width
+        # histogram and the retired per-depth sweep's dispatch count —
+        # ``dispatch_reduction`` is the wide-front batching factor.
+        d["dispatch_stats"] = res.dispatch_stats
+    return d
 
 
 def _control_plane_micro(n: int = 10_000, churn: int = 500, picks: int = 1000) -> dict:
@@ -108,6 +119,63 @@ def _control_plane_micro(n: int = 10_000, churn: int = 500, picks: int = 1000) -
         "ft_build_s": ft_build_s,
         "churn_op_latency_s": churn_op_s,
         "pick_vm_latency_s": pick_s,
+    }
+
+
+def _queue_micro(n: int = 200_000) -> dict:
+    """Time the vector engine's event-queue maintenance in isolation.
+
+    ``_fold_events`` merges the staged ``schedule()`` backlog plus the live
+    heap into one (t, seq)-sorted snapshot; ``_compact_done_heap`` rebuilds
+    the completion heap without its stale (lazily-invalidated) entries.
+    Both are O(n) passes over burst-sized queues on the engine's hot path,
+    so ``--profile`` prints them as standalone numbers — a queue-maintenance
+    regression shows up here before it is visible in end-to-end events/s.
+    """
+    import heapq
+    import random
+
+    import numpy as np
+
+    from repro.sim.engine import SimConfig
+    from repro.sim.vector_engine import VectorFlowSim
+
+    rng = random.Random(0)
+    sim = VectorFlowSim(SimConfig(engine="vector", record_trace=False))
+    # A half-consumed sorted snapshot plus a heap of fresh arrivals — the
+    # state _fold_events sees mid-burst when a bulk schedule() lands.
+    ts = sorted(rng.random() * 100.0 for _ in range(n))
+    sim._sts = ts
+    sim._sseq = list(range(n))
+    sim._spay = [None] * n
+    sim._sptr = n // 2
+    heap = [(rng.random() * 100.0, n + i, None) for i in range(n // 4)]
+    heapq.heapify(heap)
+    sim._ev_heap = heap
+    t0 = time.perf_counter()
+    sim._fold_events()
+    fold_s = time.perf_counter() - t0
+
+    # A completion heap where half the entries are stale epochs — the
+    # steady-state ratio the lazy-invalidation compaction runs against.
+    m = n
+    sim._fdone = np.zeros(m, dtype=bool)
+    sim._fstarted = np.ones(m, dtype=bool)
+    sim._epoch = np.zeros(m, dtype=np.int64)
+    done = [
+        (rng.random() * 100.0, fid, 1 if rng.random() < 0.5 else 0)
+        for fid in range(m)
+    ]
+    heapq.heapify(done)
+    sim._done_heap = done
+    t0 = time.perf_counter()
+    sim._compact_done_heap()
+    compact_s = time.perf_counter() - t0
+    return {
+        "n_events": n + n // 4 - n // 2,
+        "fold_events_s": fold_s,
+        "done_heap_entries": m,
+        "compact_done_heap_s": compact_s,
     }
 
 
@@ -189,7 +257,14 @@ def main() -> None:
     ap.add_argument(
         "--profile",
         action="store_true",
-        help="wrap the main run in cProfile and print the top-15 hotspots",
+        help="wrap the main run in cProfile and print the top-15 hotspots "
+        "plus the _fold_events/_compact_done_heap queue microbenchmark",
+    )
+    ap.add_argument(
+        "--min-giga-evs",
+        type=float,
+        default=60_000.0,
+        help="events/s floor asserted on the --giga burst (vector engine)",
     )
     ap.add_argument("--out", default="BENCH_scale.json")
     args = ap.parse_args()
@@ -218,8 +293,20 @@ def main() -> None:
 
         profiler.disable()
         pstats.Stats(profiler).sort_stats("cumulative").print_stats(15)
+        qm = _queue_micro()
+        out_queue_micro = qm
+        print(
+            f"queue micro: _fold_events merges {qm['n_events']:,} events in "
+            f"{qm['fold_events_s'] * 1e3:.1f} ms, _compact_done_heap rebuilds "
+            f"{qm['done_heap_entries']:,} entries in "
+            f"{qm['compact_done_heap_s'] * 1e3:.1f} ms"
+        )
+    else:
+        out_queue_micro = None
     out = _result_dict(cfg, res)
     out["total_wall_s"] = total_wall
+    if out_queue_micro is not None:
+        out["queue_micro"] = out_queue_micro
     out["paper_reference_s"] = 8.3  # §4.2: 2500 containers / 1000 VMs
     out["vector"] = _run_vector_twin(cfg, res, run_scale)
 
@@ -240,7 +327,8 @@ def main() -> None:
         out["mega_burst"] = mega
 
     if args.giga:
-        from repro.sim.scale import giga_burst_config
+        from repro.sim.multi_tenant import run_multi_tenant
+        from repro.sim.scale import giga_burst_config, giga_replay_config
 
         gcfg = giga_burst_config(seed=args.seed)
         t0 = time.perf_counter()
@@ -248,12 +336,40 @@ def main() -> None:
         gwall = time.perf_counter() - t0
         giga = _result_dict(gcfg, gres)
         giga["total_wall_s"] = gwall
+        giga["floor_events_per_s"] = args.min_giga_evs
         mega_inc = out.get("mega_burst")
         if mega_inc:
             giga["speedup_vs_mega_incremental"] = (
                 gres.events_per_s / mega_inc["events_per_s"]
             )
         out["giga_burst"] = giga
+
+        # Full trace replay at the same fleet size: serving + block-level
+        # provisioning + failover on one shared vector FlowSim.
+        rcfg = giga_replay_config(seed=args.seed)
+        t0 = time.perf_counter()
+        rres = run_multi_tenant(rcfg)
+        rwall = time.perf_counter() - t0
+        out["giga_replay"] = {
+            "n_tenants": len(rcfg.tenants),
+            "vm_pool_size": rcfg.vm_pool_size,
+            "duration_s": rcfg.duration_s(),
+            "engine": rcfg.wave.engine,
+            "serving": rcfg.serving is not None,
+            "blocks": rcfg.images is not None,
+            "total_wall_s": rwall,
+            "requests": sum(t.requests for t in rres.per_tenant.values()),
+            "completed": sum(t.completed for t in rres.per_tenant.values()),
+            "cold_starts": rres.cold_starts,
+            "failovers": rres.failovers,
+            "prov_makespan_s": rres.prov_makespan_s,
+            "vm_hours": rres.vm_hours(),
+            "peak_nic_utilization": rres.peak_nic_utilization,
+            "worst_p99_response_s": max(
+                t.p99_response_s for t in rres.per_tenant.values()
+            ),
+            "peak_registry_egress_gbps": rres.peak_registry_egress * 8 / 1e9,
+        }
 
     if args.compare_reference:
         ref_cfg = ScaleConfig(
@@ -317,6 +433,19 @@ def main() -> None:
             f"in {g['total_wall_s']:.1f} s wall (engine {g['wall_s']:.2f} s, "
             f"{g['events_per_s']:,.0f} ev/s{extra})"
         )
+        r = out["giga_replay"]
+        print(
+            f"giga replay: {r['n_tenants']} tenants / {r['vm_pool_size']} VM "
+            f"pool / {r['duration_s']} s trace (serving+blocks) in "
+            f"{r['total_wall_s']:.1f} s wall: {r['requests']:,} requests, "
+            f"{r['cold_starts']} cold starts, {r['failovers']} failover(s), "
+            f"worst p99 {r['worst_p99_response_s']:.2f} s"
+        )
+        if g["events_per_s"] < args.min_giga_evs:
+            raise SystemExit(
+                f"giga burst regression: {g['events_per_s']:,.0f} ev/s is "
+                f"below the {args.min_giga_evs:,.0f} ev/s floor"
+            )
 
 
 if __name__ == "__main__":

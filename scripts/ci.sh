@@ -318,4 +318,68 @@ print(
 )
 PY
 
+# Wide-front smoke: the vector engine's batched recompute must actually
+# batch.  On the paper-shape burst the wide-front dispatch count must
+# undercut the retired per-depth sweep by >= 1.1x (measured 1.13x on this
+# workload — the stagger-serialized closures are mostly single-tree, so
+# same-depth merging was already free and the wide-front gain is bounded
+# by cross-depth rounds).  When jax is importable the pallas cap-chain
+# backend (engine="vector_jax") must stay bit-identical to the numpy
+# engines on a wave and a block wave; jax missing skips that half with a
+# notice — the numpy wide-front assert runs either way.
+python - <<'PY'
+import time
+from repro.sim import ScaleConfig, WaveConfig, provision_wave, run_scale
+
+t0 = time.perf_counter()
+cfg = ScaleConfig(churn_ops=20, seed=3, wave=WaveConfig(engine="vector"))
+res = run_scale(cfg)
+ds = res.dispatch_stats
+fronts = ds["fronts_scalar"] + ds["fronts_vector"]
+reduction = ds["legacy_levels"] / fronts
+assert reduction >= 1.1, (
+    f"widefront smoke FAILED: {fronts} wide-front dispatches vs "
+    f"{ds['legacy_levels']} per-depth sweeps ({reduction:.2f}x, floor 1.1x) "
+    f"— the cross-tree front batching has regressed"
+)
+assert ds["flows_vector"] > ds["flows_scalar"], (
+    f"widefront smoke FAILED: {ds['flows_vector']} flows took the vector "
+    f"path vs {ds['flows_scalar']} scalar — the batched path is not "
+    f"carrying the bulk of the work"
+)
+
+from repro.kernels.cap_chain import have_jax
+
+if have_jax():
+    a = provision_wave("faasnet", 96, WaveConfig(engine="vector"))
+    b = provision_wave("faasnet", 96, WaveConfig(engine="vector_jax"))
+    assert a == b, (
+        "widefront smoke FAILED: vector_jax diverged from vector on the "
+        "96-VM wave"
+    )
+    from repro.core import shared_base_images
+    from repro.sim import block_wave
+
+    img = shared_base_images(1, 1, image_bytes=96 << 20)[0]
+    bv = block_wave("faasnet", 12, WaveConfig(engine="vector"), images=img)
+    bj = block_wave("faasnet", 12, WaveConfig(engine="vector_jax"), images=img)
+    assert bv == bj, (
+        "widefront smoke FAILED: vector_jax diverged from vector on the "
+        "block wave"
+    )
+    jax_note = "vector_jax bit-identical on wave + block wave"
+else:
+    jax_note = "jax not importable — vector_jax smoke SKIPPED (numpy-only host)"
+elapsed = time.perf_counter() - t0
+budget = 20.0
+assert elapsed < budget, (
+    f"widefront smoke FAILED: took {elapsed:.2f} s (budget {budget} s)"
+)
+print(
+    f"widefront smoke ok: {reduction:.2f}x dispatch reduction "
+    f"({fronts} fronts vs {ds['legacy_levels']} per-depth sweeps), "
+    f"{jax_note}, in {elapsed*1e3:.0f} ms"
+)
+PY
+
 exec python -m pytest -x -q "$@"

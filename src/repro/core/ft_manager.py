@@ -111,6 +111,7 @@ class FTManager:
         # Content-aware root election (§3.1): optional data-plane scorer,
         # see set_content_affinity.  Never serialized.
         self._content_affinity = None
+        self._content_candidates = None
         # counters for tests / telemetry
         self.stats = {
             "inserts": 0,
@@ -308,7 +309,7 @@ class FTManager:
         ]
         heapq.heapify(self._placement_heap)
 
-    def set_content_affinity(self, fn) -> None:
+    def set_content_affinity(self, fn, candidates=None) -> None:
         """Attach a content-residency scorer for root election (§3.1).
 
         ``fn(function_id, vm_id) -> int`` reports how many bytes of the
@@ -320,15 +321,31 @@ class FTManager:
         with the most resident bytes and falls back to the normal placement
         path when nothing scores above zero.  The scorer is data-plane
         state: it does not ride :meth:`snapshot`, re-attach after restore.
+
+        ``candidates`` (optional, ``() -> iterable[vm_id]``) bounds the
+        election scan to VMs that can possibly score above zero — e.g.
+        ``BlockCache.vms`` — instead of the whole fleet.  Any VM outside
+        the candidate set must score 0 (it would be skipped anyway), so
+        the election result is unchanged; on a 100k-VM pool this turns an
+        O(fleet) scan per reservation into O(warm VMs).
         """
         self._content_affinity = fn
+        self._content_candidates = candidates
 
     def _content_root_for(self, function_id: str, now: float) -> Optional[VMInfo]:
         """Root election: the admissible VM holding the most image bytes."""
         need = self.mem_need(function_id)
         best: Optional[VMInfo] = None
         best_key: Optional[tuple] = None
-        for vm_id, vm in self.vms.items():
+        if self._content_candidates is not None:
+            vms = self.vms
+            scan = [
+                (vid, vms[vid]) for vid in self._content_candidates()
+                if vid in vms
+            ]
+        else:
+            scan = self.vms.items()
+        for vm_id, vm in scan:
             if not vm.alive or function_id in vm.functions:
                 continue
             if len(vm.functions) >= self.max_functions_per_vm:

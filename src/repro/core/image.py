@@ -68,13 +68,26 @@ class ImageSpec:
         digests = [la.digest for la in self.layers]
         if len(set(digests)) != len(digests):
             raise ValueError(f"image {self.name!r} repeats a layer digest")
+        # Identity-keyed memo caches (object.__setattr__: the dataclass is
+        # frozen, and these are derived state, not fields — eq/hash/repr are
+        # untouched).  layer()/geometry()/boot_blocks() are pure functions
+        # of the frozen spec but sit on the content-affinity hot path —
+        # scored once per candidate VM per reservation — where recomputing
+        # block geometry dominated giga-replay wall time.
+        object.__setattr__(
+            self, "_layer_by_digest", {la.digest: la for la in self.layers}
+        )
+        object.__setattr__(self, "_geom_cache", {})
+        object.__setattr__(self, "_boot_blocks_cache", None)
 
     # -- layer lookup ----------------------------------------------------
     def layer(self, digest: str) -> LayerSpec:
-        for la in self.layers:
-            if la.digest == digest:
-                return la
-        raise KeyError(f"image {self.name!r} has no layer {digest!r}")
+        try:
+            return self._layer_by_digest[digest]
+        except KeyError:
+            raise KeyError(
+                f"image {self.name!r} has no layer {digest!r}"
+            ) from None
 
     def total_bytes(self) -> int:
         return sum(la.size for la in self.layers)
@@ -88,11 +101,16 @@ class ImageSpec:
         exact covering-range arithmetic the on-disk format uses — apply
         verbatim to the simulated layer.
         """
+        g = self._geom_cache.get(digest)
+        if g is not None:
+            return g
         size = self.layer(digest).size
         bs = self.block_size
         n = max(1, -(-size // bs))
         offsets = tuple(min(i * bs, size) for i in range(n)) + (size,)
-        return BlockManifest(bs, n, size, offsets)
+        g = BlockManifest(bs, n, size, offsets)
+        self._geom_cache[digest] = g
+        return g
 
     def layer_blocks(self, digest: str) -> int:
         return self.geometry(digest).n_blocks
@@ -118,6 +136,9 @@ class ImageSpec:
         blocks *covering* each layer's share are the runnable prefix —
         block alignment is where Fig. 20's read amplification comes from.
         """
+        cached = self._boot_blocks_cache
+        if cached is not None:
+            return dict(cached)
         budget = self.boot_bytes()
         out: dict[str, int] = {}
         for la in self.layers:
@@ -128,6 +149,7 @@ class ImageSpec:
                 continue
             first, last = self.geometry(la.digest).block_range_for(0, take)
             out[la.digest] = last - first + 1
+        object.__setattr__(self, "_boot_blocks_cache", dict(out))
         return out
 
     def boot_prefix_bytes(self, digest: str) -> int:
@@ -183,12 +205,22 @@ class BlockCache:
         """VM reclaimed: its block cache goes with it."""
         self._vm.pop(vm_id, None)
 
+    def vms(self):
+        """VM ids holding any resident blocks (content-root candidate set)."""
+        return self._vm.keys()
+
     def resident_bytes(self, vm_id: str, image: ImageSpec) -> int:
         """Bytes of ``image`` already on the VM (content-aware placement score)."""
+        held = self._vm.get(vm_id)
+        if not held:
+            return 0
         total = 0
         for la in image.layers:
-            n = min(self.resident_blocks(vm_id, la.digest), image.layer_blocks(la.digest))
-            total += image.prefix_bytes(la.digest, n)
+            n = held.get(la.digest, 0)
+            if n:
+                total += image.prefix_bytes(
+                    la.digest, min(n, image.layer_blocks(la.digest))
+                )
         return total
 
     def missing_layer_bytes(

@@ -66,6 +66,10 @@ class WaveConfig:
     # into SimConfig by every wave/replay entry point.
     engine: str = "incremental"
     record_trace: bool = True
+    # Vector engines: closures whose ready set is at most this many flows
+    # take the scalar per-flow path instead of the batched numpy/jax one
+    # (small-front fixed-cost crossover; see SimConfig.vector_scalar_cutoff).
+    vector_scalar_cutoff: int = 64
     # Block-level provisioning (paper §3.1–§3.2): when set, provision_wave
     # fetches this image's missing blocks per layer instead of the scalar
     # ``image_bytes * startup_fraction`` payload, and a container is ready
@@ -125,6 +129,7 @@ def provision_wave(
             coordinator_cost_s=coord_cost,
             engine=cfg.engine,
             record_trace=cfg.record_trace,
+            vector_scalar_cutoff=cfg.vector_scalar_cutoff,
         )
     )
     for vm, cap in (slow_vms or {}).items():
@@ -262,6 +267,7 @@ def block_wave(
             hop_latency=cfg.hop_latency,
             engine=cfg.engine,
             record_trace=cfg.record_trace,
+            vector_scalar_cutoff=cfg.vector_scalar_cutoff,
         )
     )
     control = cfg.rpc.control_plane_total()

@@ -347,6 +347,7 @@ class MultiTenantReplay:
                 hop_latency=w.hop_latency,
                 engine=w.engine,
                 record_trace=w.record_trace,
+                vector_scalar_cutoff=w.vector_scalar_cutoff,
             )
         )
         # Shard assignment is scheduler state (it rides the failover snapshot
@@ -374,7 +375,9 @@ class MultiTenantReplay:
             if missing:
                 raise ValueError(f"cfg.images missing tenants: {missing}")
             self.block_cache = BlockCache()
-            self.mgr.set_content_affinity(self._image_affinity)
+            self.mgr.set_content_affinity(
+                self._image_affinity, candidates=self.block_cache.vms
+            )
         self.failovers = 0
         self.vm_seconds = 0.0
         # Serving mode: per-VM completion times of in-flight requests across
@@ -473,7 +476,9 @@ class MultiTenantReplay:
         # The block cache is data-plane state: it never crossed the wire,
         # but the restored manager needs the scorer re-attached.
         if self.block_cache is not None:
-            self.mgr.set_content_affinity(self._image_affinity)
+            self.mgr.set_content_affinity(
+                self._image_affinity, candidates=self.block_cache.vms
+            )
 
     def _failover(self) -> None:
         """Kill the scheduler: serialize, discard, restore from the wire copy.

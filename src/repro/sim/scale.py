@@ -217,6 +217,48 @@ def serving_config(
     return cfg
 
 
+def giga_replay_config(
+    seed: int = 0,
+    *,
+    n_tenants: int = 32,
+    minutes: int = 8,
+    scale: float = 0.5,
+    engine: str = "vector",
+) -> "MultiTenantConfig":
+    """Full trace replay at the giga tier: serving + blocks, 100k-VM pool.
+
+    The end-to-end companion of :func:`giga_burst_config`: where the burst
+    tier stresses raw flow-event throughput on isolated waves, this drives
+    every subsystem at once through one shared :class:`VectorFlowSim` —
+    32 tenants of sub-tick request serving (CPU slots, herd-controlled
+    scale-out), block-level on-demand provisioning against four shared base
+    images, idle reclaim and a mid-run scheduler failover, all against the
+    100k-VM fleet.  Exists to prove the wide-front vector engine under the
+    replay loop's interleaved ``run(until=...)`` stepping rather than one
+    monolithic ``run()``; recorded as ``giga_replay`` in
+    ``BENCH_scale.json`` by ``benchmarks/bench_scale_1000.py --giga``.
+    """
+    from repro.core.image import shared_base_images
+
+    cfg = serving_config(
+        seed,
+        n_tenants=n_tenants,
+        vm_pool_size=100_000,
+        minutes=minutes,
+        scale=scale,
+        failover_at=(minutes * 60) // 2,  # default 720s outlives short replays
+    )
+    cfg.wave.engine = engine
+    cfg.wave.record_trace = False
+    images = shared_base_images(
+        n_tenants, 4, image_bytes=cfg.wave.image_bytes
+    )
+    cfg.images = {
+        t.function_id: img for t, img in zip(cfg.tenants, images)
+    }
+    return cfg
+
+
 @dataclass
 class ScaleResult:
     makespan: float  # sim seconds: last payload fully fetched
@@ -241,6 +283,14 @@ class ScaleResult:
     # Block mode only (cfg.images set): sim time when the last container's
     # boot working set landed — the §3.2 runnable milestone.  0.0 otherwise.
     runnable_makespan: float = 0.0
+    # Vector engines only ({} otherwise): per-run recompute dispatch
+    # telemetry — scalar-vs-vector front counts, per-front flow totals, the
+    # front-width histogram (bucket k = widths [2^(k-1), 2^k)) and the
+    # retired per-depth sweep's dispatch count (``legacy_levels``), so
+    # BENCH_scale.json can prove the wide-front batching claim from a run's
+    # own numbers: ``legacy_levels / (fronts_scalar + fronts_vector)`` is
+    # the dispatch-reduction factor.
+    dispatch_stats: dict = field(default_factory=dict)
 
 
 def _function_ids(cfg: ScaleConfig) -> list[str]:
@@ -326,6 +376,7 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
             hop_latency=w.hop_latency,
             engine=w.engine,
             record_trace=w.record_trace,
+            vector_scalar_cutoff=w.vector_scalar_cutoff,
         )
     )
     control = w.rpc.control_plane_total()
@@ -417,4 +468,19 @@ def run_scale(cfg: ScaleConfig | None = None) -> ScaleResult:
         churn_op_s=churn_s / cfg.churn_ops if cfg.churn_ops > 0 else 0.0,
         engine=w.engine,
         runnable_makespan=max(runnable_at.values()) if runnable_at else 0.0,
+        dispatch_stats=_snapshot_dispatch_stats(sim),
     )
+
+
+def _snapshot_dispatch_stats(sim) -> dict:
+    """Deep-copied engine dispatch telemetry ({} for non-vector engines)."""
+    ds = getattr(sim, "dispatch_stats", None)
+    if not ds:
+        return {}
+    out = dict(ds)
+    out["front_width_hist"] = dict(ds.get("front_width_hist", {}))
+    fronts = out.get("fronts_scalar", 0) + out.get("fronts_vector", 0)
+    out["dispatch_reduction"] = (
+        out.get("legacy_levels", 0) / fronts if fronts else 0.0
+    )
+    return out

@@ -13,11 +13,16 @@ chained through dict registries.  The incremental engine's per-flow
   gathers;
 * the out-cap / in-cap / per-stream / decompress / QPS-throttle minimum is
   one elementwise ``np.minimum`` chain over the dirty candidates;
-* parent-chain rate propagation is a bounded depth-sweep: candidates are
-  grouped by cached streaming depth and processed shallow-to-deep
-  (fid-ascending within a level), so a level's parent rates are final
-  before its children read them — the exact global ``(depth, fid)`` order
-  of the incremental engine's worklist heap;
+* parent-chain rate propagation is a **wide-front sweep**: each round
+  re-rates every pending flow with no pending ancestor — across all trees
+  and tenants at once — so independent subtrees at different streaming
+  depths collapse into one dispatch instead of one per depth.  A flow is
+  rated exactly once per recompute, after its parent's rate is final, so
+  the rate *values* are the ones the incremental engine's ``(depth, fid)``
+  worklist pops compute; the order-sensitive accounting (registry/NIC
+  running sums, the rate log) is deferred to a single ``(depth, fid)``-
+  sorted pass at the end of the call, which reproduces the incremental
+  engine's add sequence bit-for-bit;
 * completion times are batch-computed as ``t_last + remaining / rate`` over
   the changed slice and fed to the same lazily-invalidated epoch heap, with
   all same-timestamp completions extracted in one batch.
@@ -48,10 +53,11 @@ from repro.core.topology import DistributionPlan, Flow
 
 from .engine import SimConfig, plan_releases, wire_runnable
 
-__all__ = ["VectorFlowSim"]
+__all__ = ["VectorFlowSim", "VectorJaxFlowSim"]
 
 _F64 = np.float64
 _I64 = np.int64
+_EMPTY_I64 = np.empty(0, dtype=_I64)  # shared read-only seed for node fid bases
 
 
 class _VFlowState:
@@ -114,8 +120,12 @@ class _VFlowState:
 
     @notify_bytes.setter
     def notify_bytes(self, v: float) -> None:
-        self._eng._fnoti[self.fid] = v
-        self._eng._fhasnoti[self.fid] = v > 0.0
+        eng = self._eng
+        eng._fnoti[self.fid] = v
+        armed = v > 0.0
+        eng._fhasnoti[self.fid] = armed
+        if armed:
+            eng._any_noti = True
 
     @property
     def notified(self) -> bool:
@@ -172,6 +182,10 @@ class VectorFlowSim:
         self._ftot = np.zeros(cap, dtype=_F64)  # total bytes (notify math)
         self._fnoti = np.zeros(cap, dtype=_F64)  # runnable-prefix threshold
         self._fhasnoti = np.zeros(cap, dtype=bool)  # notify armed + unfired
+        # Scratch: "scheduled, not yet processed" marks for one _recompute
+        # call (always all-False between calls — every scheduled front is
+        # processed before the call returns).
+        self._fsched = np.zeros(cap, dtype=bool)
         # Node arrays ----------------------------------------------------------
         ncap = 256
         self._ncap = ncap
@@ -182,13 +196,21 @@ class VectorFlowSim:
         self._nout_cap = np.zeros(ncap, dtype=_F64)  # egress cap (slow-VM aware)
         self._nqps = np.zeros(ncap, dtype=_F64)
         self._nreg = np.zeros(ncap, dtype=bool)  # node is a registry shard
-        self._nout_fids: list[set[int]] = []  # node -> active out fids
-        self._nin_fids: list[set[int]] = []
+        # node -> fids touching the node (both directions), append-only with
+        # lazy compaction: completions leave stale entries behind (dropped
+        # by _recompute's done filter) instead of paying a hashed discard
+        # per flow.  ``_nlive`` tracks the live flow count per node as plain
+        # ints (read once per dirty-node visit, where a numpy scalar read
+        # would dominate); a list compacts against the done flags when it
+        # outgrows twice its live count — amortized O(1) per completion.
+        self._nfids: list[list[int]] = []
+        self._nlive: list[int] = []
         self._vm_out = np.zeros(ncap, dtype=_F64)  # running out-rate sums
         self._vm_in = np.zeros(ncap, dtype=_F64)
         # Completion heap + dirty state ---------------------------------------
         self._done_heap: list[tuple[float, int, int]] = []  # (t_finish, fid, epoch)
         self._notify_heap: list[tuple[float, int, int]] = []  # (t_prefix, fid, epoch)
+        self._any_noti = False  # any runnable-prefix notify ever armed
         self._n_active = 0
         self._dirty_nodes: set[int] = set()
         self._dirty_fids: set[int] = set()
@@ -200,6 +222,23 @@ class VectorFlowSim:
         self.peak_shard_egress: dict[str, float] = {}
         self.peak_registry_egress = 0.0
         self.peak_nic_utilization = 0.0
+        # Dispatch telemetry: wide-front recompute counters.  ``legacy_levels``
+        # counts the per-depth sweeps the retired depth-level algorithm would
+        # have dispatched on the same closures (one per distinct streaming
+        # depth per call), so ``legacy_levels / (fronts_scalar +
+        # fronts_vector)`` is the front-widening factor BENCH_scale.json
+        # records.  ``front_width_hist`` keys are ``width.bit_length()``
+        # (i.e. bucket k holds fronts of width [2^(k-1), 2^k)).
+        self.dispatch_stats: dict = {
+            "recompute_calls": 0,
+            "fronts_scalar": 0,
+            "fronts_vector": 0,
+            "flows_scalar": 0,
+            "flows_vector": 0,
+            "legacy_levels": 0,
+            "peak_active": 0,
+            "front_width_hist": {},
+        }
 
     # ------------------------------------------------------------------
     @property
@@ -236,6 +275,7 @@ class VectorFlowSim:
         self._ftot = _grown(self._ftot, cap)
         self._fnoti = _grown(self._fnoti, cap)
         self._fhasnoti = _grown(self._fhasnoti, cap)
+        self._fsched = _grown(self._fsched, cap)
 
     def _grow_nodes(self, need: int) -> None:
         if need <= self._ncap:
@@ -259,8 +299,8 @@ class VectorFlowSim:
         self._grow_nodes(i + 1)
         self._node_id[name] = i
         self._nname.append(name)
-        self._nout_fids.append(set())
-        self._nin_fids.append(set())
+        self._nfids.append([])
+        self._nlive.append(0)
         if is_registry_node(name):
             shard = shard_index(name)
             self._nout_cap[i] = self.registry.egress_of(shard)
@@ -278,7 +318,7 @@ class VectorFlowSim:
         i = self._node_id.get(vm_id)
         if i is not None and not self._nreg[i]:
             self._nout_cap[i] = out_cap
-            if self._nout_fids[i]:
+            if self._nlive[i]:
                 self._dirty_nodes.add(i)
 
     def clear_slow_vm(self, vm_id: str) -> None:
@@ -286,7 +326,7 @@ class VectorFlowSim:
         i = self._node_id.get(vm_id)
         if i is not None and not self._nreg[i]:
             self._nout_cap[i] = self.cfg.vm_nic.out_cap
-            if self._nout_fids[i]:
+            if self._nlive[i]:
                 self._dirty_nodes.add(i)
 
     def schedule(self, t: float, fn) -> None:
@@ -443,15 +483,17 @@ class VectorFlowSim:
         sk_l = sk.tolist()
         dk_l = dk.tolist()
         dn = self._dirty_nodes
-        nout_f, nin_f = self._nout_fids, self._nin_fids
+        nf = self._nfids
+        nlive = self._nlive
         for i, fid in enumerate(fids):
-            s = sk_l[i]
-            d = dk_l[i]
-            nout_f[s].add(fid)
-            nin_f[d].add(fid)
-            # Counts on both NICs changed: every flow sharing them is dirty.
-            dn.add(s)
-            dn.add(d)
+            s, d = sk_l[i], dk_l[i]
+            nf[s].append(fid)
+            nf[d].append(fid)
+            nlive[s] += 1
+            nlive[d] += 1
+        # Counts on both NICs changed: every flow sharing them is dirty.
+        dn.update(sk_l)
+        dn.update(dk_l)
         if self._record_trace:
             tr = self._trace_raw
             for fid in fids:
@@ -461,179 +503,265 @@ class VectorFlowSim:
     # Vectorized rate maintenance
     # ------------------------------------------------------------------
     def _recompute(self) -> None:
-        """Re-rate the dirty closure as depth-level array passes."""
+        """Re-rate the dirty closure as wide-front array passes.
+
+        Instead of sweeping the closure one streaming depth at a time (so
+        25 trees' level-k flows cost 25 tiny dispatches), each round
+        processes the whole **ready front**: every pending flow with no
+        pending ancestor, across all trees and tenants at once.  A flow's
+        rate depends only on its NIC counts (constant during a recompute)
+        and its parent's final rate, so each flow is rated exactly once,
+        with the same value the incremental engine's ``(depth, fid)``
+        worklist pop computes.  Independent subtrees at different depths
+        collapse into one dispatch, and the number of rounds is bounded by
+        the number of distinct depths (the min-depth pending flow is always
+        ready), so fronts never exceed the retired per-depth sweep count.
+
+        Bit-identity of the running accounting sums is preserved by
+        *deferring* the per-shard registry / per-VM NIC delta accumulation
+        (and the rate log) to a single ``(depth, fid)``-sorted pass at the
+        end of the call: the incremental engine's worklist pops are
+        globally ``(depth, fid)``-ascending, so applying the same float64
+        deltas in that order reproduces its running sums bit-for-bit.
+        Settles, rate/epoch writes and heap pushes are per-flow independent
+        and stay inline with each front.
+        """
         dn, df = self._dirty_nodes, self._dirty_fids
         self._dirty_nodes, self._dirty_fids = set(), set()
-        cand: set[int] = set(df)
-        nout_f, nin_f = self._nout_fids, self._nin_fids
+        fdone = self._fdone
+        nf, nlive = self._nfids, self._nlive
+        buf: list[int] = list(df)
+        ext = buf.extend
         for n in dn:
-            cand.update(nout_f[n])
-            cand.update(nin_f[n])
-        if not cand:
-            return
-        arr = np.fromiter(cand, dtype=_I64, count=len(cand))
-        keep = self._fstarted[arr] & ~self._fdone[arr]
-        if not keep.all():
-            arr = arr[keep]
-        if arr.size == 0:
+            lst = nf[n]
+            if lst:
+                if len(lst) > (nlive[n] << 1) + 4:
+                    # compaction removes at least half the list, so the work
+                    # is amortized O(1) per completed flow; big lists (hot
+                    # registry shards) drop their dead weight vectorized
+                    if len(lst) > 256:
+                        a = np.asarray(lst, dtype=_I64)
+                        lst = a[~fdone[a]].tolist()
+                    else:
+                        lst = [f for f in lst if not fdone[f]]
+                    nf[n] = lst
+                ext(lst)
+        if not buf:
             return
         cfg = self.cfg
+        cutoff = cfg.vector_scalar_cutoff
+        stats = self.dispatch_stats
+        if len(buf) <= 48:
+            # Small closure: dedup/sort/filter in plain Python, and when the
+            # survivor set is small enough route the whole closure through
+            # the scalar mirror — a handful of flows cannot amortize the
+            # ~30 fixed-cost numpy dispatches of the array path below, and
+            # at mega/giga scale most recompute calls look exactly like this.
+            fstarted = self._fstarted
+            fs = sorted({f for f in buf if fstarted[f] and not fdone[f]})
+            if not fs:
+                return
+            if len(fs) <= 32:
+                stats["recompute_calls"] += 1
+                if self._n_active > stats["peak_active"]:
+                    stats["peak_active"] = self._n_active
+                self._recompute_small(fs, self.now)
+                return
+            arr = np.asarray(fs, dtype=_I64)
+        else:
+            # unique() both dedups (a fid sits on two NICs, both may be
+            # dirty) and sorts — fronts stay fid-ascending as subsets of
+            # this sorted array; stale entries (completed flows) wash out
+            # in the filter.
+            arr = np.unique(np.asarray(buf, dtype=_I64))
+            keep = self._fstarted[arr] & ~fdone[arr]
+            if not keep.all():
+                arr = arr[keep]
+            if arr.size == 0:
+                return
         now = self.now
         flows = self._flows
-        # Group candidates by streaming depth, fid-ascending within a level:
-        # processing levels shallow-to-deep reproduces the incremental
-        # engine's global (depth, fid) worklist order exactly.
-        deps = self._fdep[arr]
-        order = np.lexsort((arr, deps))
-        arr = arr[order]
-        deps = deps[order]
-        cuts = np.flatnonzero(np.diff(deps)) + 1
-        pending: dict[int, list[np.ndarray]] = {}
-        for d, chunk in zip(
-            deps[np.concatenate(([0], cuts))].tolist(), np.split(arr, cuts)
-        ):
-            pending[d] = [chunk]
-        touched_out: list[int] = []
-        touched_in: list[int] = []
-        while pending:
-            d = min(pending)
-            chunks = pending.pop(d)
-            fids = chunks[0] if len(chunks) == 1 else np.unique(np.concatenate(chunks))
-            act = self._fstarted[fids] & ~self._fdone[fids]
-            if not act.all():
-                fids = fids[act]
-            if fids.size == 0:
-                continue
-            if fids.size <= 64:
-                # Small level: ~40 numpy dispatches cost more than the work
-                # itself, so run the identical arithmetic as Python scalars
-                # (same operand order on the same float64 values — the bits
-                # cannot differ).
-                nc = self._scalar_level(fids, now, flows, touched_out, touched_in)
-                if nc:
-                    pending.setdefault(d + 1, []).append(
-                        np.asarray(nc, dtype=_I64)
-                    )
-                continue
-            src = self._fsrc[fids]
-            dst = self._fdst[fids]
-            n_out = self._nout_cnt[src]
-            r = np.minimum(cfg.per_stream_cap, self._nout_cap[src] / n_out)
-            np.minimum(r, cfg.vm_nic.in_cap / self._nin_cnt[dst], out=r)
-            np.minimum(r, cfg.decompress_rate, out=r)
-            blk = self._fblk[fids]
-            if blk.any():
-                # per-shard request throttle shared by the shard's streams
-                bi = np.flatnonzero(blk)
-                r[bi] = np.minimum(
-                    r[bi], cfg.block_size * self._nqps[src[bi]] / n_out[bi]
-                )
-            par = self._fpar[fids]
-            pm = par >= 0
-            if pm.any():
-                pi = np.flatnonzero(pm)
-                live = ~self._fdone[par[pi]]
+        stats["recompute_calls"] += 1
+        if self._n_active > stats["peak_active"]:
+            stats["peak_active"] = self._n_active
+        hist = stats["front_width_hist"]
+        # --- Round assignment (one pass, mostly vectorized) ---------------
+        # Round 0 is the wide front: every candidate with no pending
+        # ancestor, across all trees and depths at once.  A candidate with
+        # a pending ancestor anywhere up its *live* chain is deferred to
+        # round ``depth - min_depth`` — a conservative slot that keeps every
+        # ancestor (including settled intermediates that may re-join via
+        # cascade) strictly earlier: a flow at round r can only be affected
+        # by flows at rounds < r, so each flow is rated exactly once, after
+        # its parent's rate is final.  Empty rounds cost nothing (dict).
+        fdep = self._fdep
+        mask = self._fsched  # scheduled-not-yet-processed marks (all-False
+        mask[arr] = True  # between calls; every front clears its slice)
+        blocked_any = False
+        dep_arr = None
+        par_in = None
+        if arr.size > 1:
+            dep_arr = fdep[arr]
+            par_arr = self._fpar[arr]
+            pos = np.searchsorted(arr, par_arr)
+            par_in = arr[np.minimum(pos, arr.size - 1)] == par_arr
+            # (par_arr == -1 never matches: fids are non-negative)
+            maybe = np.flatnonzero(~par_in & (par_arr >= 0))
+            if maybe.size:
+                # Gap scan: a settled (non-candidate) parent can hide a
+                # pending grandparent whose change will cascade back through
+                # it — those flows must wait too.  Lane-parallel up-walk:
+                # every undecided lane ascends one ancestor per step,
+                # dropping out when it hits a pending candidate (blocked),
+                # the root, or a done ancestor (a done flow no longer
+                # transmits rate changes downward); steps are bounded by the
+                # deepest live chain, with every step fully vectorized.
+                fpar = self._fpar
+                idx = maybe
+                cur = par_arr[maybe]
+                live = ~fdone[cur]
                 if not live.all():
-                    pi = pi[live]
-                if pi.size:
-                    r[pi] = np.minimum(r[pi], self._rate[par[pi]])
-            changed = r != self._rate[fids]
-            if not changed.any():
-                continue
-            ci = np.flatnonzero(changed)
-            ch = fids[ci]  # fid-ascending (fids sorted)
-            r_new = r[ci]
-            old = self._rate[ch]
-            # settle under the old rate (mirror of FlowSim._settle)
-            tl = self._tlast[ch]
-            adv = now > tl
-            if adv.any():
-                ai = np.flatnonzero(adv)
-                aj = ch[ai]
-                pos = old[ai] > 0.0
-                if pos.any():
-                    ak = aj[pos]
-                    self._rem[ak] = np.maximum(
-                        0.0, self._rem[ak] - self._rate[ak] * (now - self._tlast[ak])
+                    idx = idx[live]
+                    cur = cur[live]
+                while idx.size:
+                    hit = mask[cur]
+                    if hit.any():
+                        par_in[idx[hit]] = True
+                        miss = ~hit
+                        idx = idx[miss]
+                        if not idx.size:
+                            break
+                        cur = cur[miss]
+                    cur = fpar[cur]
+                    live = cur >= 0
+                    if not live.all():
+                        idx = idx[live]
+                        if not idx.size:
+                            break
+                        cur = cur[live]
+                    live = ~fdone[cur]
+                    if not live.all():
+                        idx = idx[live]
+                        cur = cur[live]
+            blocked_any = bool(par_in.any())
+        # Deferred (depth, fid)-ordered accounting (see docstring) ---------
+        acc_fids: list[np.ndarray] = []
+        acc_old: list[np.ndarray] = []
+        acc_new: list[np.ndarray] = []
+        sc_fids: list[int] = []
+        sc_old: list[float] = []
+        sc_new: list[float] = []
+        dseen: set[int] = set()  # distinct depths the retired sweep would pay
+        scalar_front = self._scalar_front
+        vector_front = self._vector_front
+
+        def _front(fids: np.ndarray) -> list[int]:
+            mask[fids] = False
+            w = fids.size
+            hist_b = w.bit_length()
+            hist[hist_b] = hist.get(hist_b, 0) + 1
+            if w <= 64:
+                dseen.update(fdep[fids].tolist())
+            else:
+                dseen.update(np.unique(fdep[fids]).tolist())
+            if w <= cutoff:
+                stats["fronts_scalar"] += 1
+                stats["flows_scalar"] += w
+                return scalar_front(fids, now, flows, mask, sc_fids, sc_old, sc_new)
+            stats["fronts_vector"] += 1
+            stats["flows_vector"] += w
+            return vector_front(fids, now, flows, mask, acc_fids, acc_old, acc_new)
+
+        if not blocked_any:
+            # Fast path (the common case): nothing in the closure waits on
+            # anything else in it — the whole closure is round 0, and each
+            # cascade generation is the next front.  Fronts are disjoint
+            # (every flow has one parent, processed exactly once).
+            kids = _front(arr)
+            while kids:
+                ka = np.asarray(kids, dtype=_I64)
+                ka.sort()
+                kids = _front(ka)
+        else:
+            rounds = np.zeros(arr.size, dtype=_I64)
+            dmin = int(dep_arr.min())
+            bi = np.flatnonzero(par_in)
+            rounds[bi] = dep_arr[bi] - dmin
+            order = np.lexsort((arr, rounds))
+            sarr = arr[order]
+            srnd = rounds[order]
+            cuts = np.flatnonzero(np.diff(srnd)) + 1
+            sched: dict[int, list[np.ndarray]] = {}
+            for rv, chunk in zip(
+                srnd[np.concatenate(([0], cuts))].tolist(), np.split(sarr, cuts)
+            ):
+                sched[rv] = [chunk]
+            while sched:
+                cur = min(sched)
+                chunks = sched.pop(cur)
+                if len(chunks) == 1:
+                    fids = chunks[0]
+                else:
+                    # chunks are disjoint: cascade kids come via their single
+                    # parent and the mask filter keeps already-scheduled
+                    # closure members in their own (later) slot
+                    fids = np.concatenate(chunks)
+                    fids.sort()
+                kids = _front(fids)
+                if kids:
+                    # Cascade: changed parents re-rate their live children
+                    # next round (a child still scheduled later keeps its
+                    # own slot).
+                    sched.setdefault(cur + 1, []).append(
+                        np.asarray(kids, dtype=_I64)
                     )
-                self._tlast[aj] = now
-            delta = r_new - old
-            srcc = src[ci]
-            dstc = dst[ci]
-            isreg = self._nreg[srcc]
-            if isreg.any():
-                # per-flow dict accumulation in (depth, fid) order — the
-                # running per-shard sums must match the incremental engine
-                # bit-for-bit, so mirror its add sequence exactly
-                names = self._nname
-                reg = self._reg_out
-                dl = delta.tolist()
-                for k in np.flatnonzero(isreg).tolist():
-                    skey = names[srcc[k]]
-                    reg[skey] = reg.get(skey, 0.0) + dl[k]
+        # The retired depth-sweep dispatched one pass per distinct streaming
+        # depth over the exact same processed set; count what it would have
+        # cost on this closure so one run yields the honest reduction ratio.
+        stats["legacy_levels"] += len(dseen)
+        if sc_fids:
+            acc_fids.append(np.asarray(sc_fids, dtype=_I64))
+            acc_old.append(np.asarray(sc_old, dtype=_F64))
+            acc_new.append(np.asarray(sc_new, dtype=_F64))
+        if not acc_fids:
+            return
+        if len(acc_fids) == 1:
+            allf, allo, alln = acc_fids[0], acc_old[0], acc_new[0]
+        else:
+            allf = np.concatenate(acc_fids)
+            allo = np.concatenate(acc_old)
+            alln = np.concatenate(acc_new)
+        order = np.lexsort((allf, self._fdep[allf]))
+        allf = allf[order]
+        alln = alln[order]
+        delta = alln - allo[order]
+        srcc = self._fsrc[allf]
+        dstc = self._fdst[allf]
+        isreg = self._nreg[srcc]
+        vm_nodes = None
+        if isreg.any():
+            # per-flow dict accumulation in (depth, fid) order — the running
+            # per-shard sums must match the incremental engine bit-for-bit,
+            # so mirror its add sequence exactly
+            names = self._nname
+            reg = self._reg_out
+            dl = delta.tolist()
+            for k in np.flatnonzero(isreg).tolist():
+                skey = names[srcc[k]]
+                reg[skey] = reg.get(skey, 0.0) + dl[k]
             vm = ~isreg
             if vm.any():
                 vi = np.flatnonzero(vm)
-                np.add.at(self._vm_out, srcc[vi], delta[vi])
-                touched_out.extend(srcc[vi].tolist())
-            np.add.at(self._vm_in, dstc, delta)
-            touched_in.extend(dstc.tolist())
-            self._rate[ch] = r_new
-            self._epoch[ch] += 1
-            pos_r = r_new > 0.0
-            est = np.zeros(ch.size, dtype=_F64)
-            if pos_r.any():
-                pj = np.flatnonzero(pos_r)
-                est[pj] = self._tlast[ch[pj]] + self._rem[ch[pj]] / r_new[pj]
-            ch_l = ch.tolist()
-            ep_l = self._epoch[ch].tolist()
-            entries = [
-                (t, fid, e)
-                for t, fid, e, p in zip(est.tolist(), ch_l, ep_l, pos_r.tolist())
-                if p
-            ]
-            nmask = self._fhasnoti[ch] & pos_r
-            if nmask.any():
-                # prefix-landing estimate under the new rate; a threshold
-                # already passed clamps to "due now" (mirror of FlowSim)
-                nj = np.flatnonzero(nmask)
-                chn = ch[nj]
-                pend = self._fnoti[chn] - (self._ftot[chn] - self._rem[chn])
-                nt = self._tlast[chn] + np.maximum(0.0, pend) / r_new[nj]
-                nheap = self._notify_heap
-                for t, fid, e in zip(
-                    nt.tolist(), chn.tolist(), self._epoch[chn].tolist()
-                ):
-                    heapq.heappush(nheap, (t, fid, e))
-            # A parent-rate change propagates down the streaming chain.
-            next_chunk: list[int] = []
-            for fid in ch_l:
-                for c in flows[fid].children:
-                    if c.started and not c.done:
-                        next_chunk.append(c.fid)
-            if self.record_rates:
-                rl = self.rate_log
-                for fid, rn in zip(ch_l, r_new.tolist()):
-                    rl.append((now, fid, rn))
-            if entries:
-                heap = self._done_heap
-                if len(entries) > 1024 and 2 * len(entries) > len(heap):
-                    # bulk path: drop stale entries while we rebuild anyway
-                    fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
-                    heap = [
-                        e for e in heap
-                        if fstarted[e[1]] and not fdone[e[1]] and e[2] == ep[e[1]]
-                    ]
-                    heap.extend(entries)
-                    heapq.heapify(heap)
-                    self._done_heap = heap
-                else:
-                    for e in entries:
-                        heapq.heappush(heap, e)
-            if next_chunk:
-                pending.setdefault(d + 1, []).append(
-                    np.asarray(next_chunk, dtype=_I64)
-                )
+                vm_nodes = srcc[vi]
+                np.add.at(self._vm_out, vm_nodes, delta[vi])
+        else:
+            vm_nodes = srcc
+            np.add.at(self._vm_out, srcc, delta)
+        np.add.at(self._vm_in, dstc, delta)
+        if self.record_rates:
+            rl = self.rate_log
+            for fid, rn in zip(allf.tolist(), alln.tolist()):
+                rl.append((now, fid, rn))
         # Peak telemetry (identical comparison sequence to the incremental
         # engine; peaks are max-folds, so ordering cannot change the result).
         if self._reg_out:
@@ -644,10 +772,8 @@ class VectorFlowSim:
             total = sum(self._reg_out.values())
             if total > self.peak_registry_egress:
                 self.peak_registry_egress = total
-        if touched_out:
-            nodes = np.unique(
-                np.fromiter(touched_out, dtype=_I64, count=len(touched_out))
-            )
+        if vm_nodes is not None and vm_nodes.size:
+            nodes = np.unique(vm_nodes)
             caps = self._nout_cap[nodes]
             valid = (caps > 0) & np.isfinite(caps)
             if valid.any():
@@ -655,60 +781,422 @@ class VectorFlowSim:
                 if u > self.peak_nic_utilization:
                     self.peak_nic_utilization = u
         in_cap = cfg.vm_nic.in_cap
-        if touched_in and in_cap > 0 and in_cap != math.inf:
-            nodes = np.unique(
-                np.fromiter(touched_in, dtype=_I64, count=len(touched_in))
-            )
+        if in_cap > 0 and in_cap != math.inf:
+            nodes = np.unique(dstc)
             u = float((self._vm_in[nodes] / in_cap).max())
             if u > self.peak_nic_utilization:
                 self.peak_nic_utilization = u
 
-    def _scalar_level(
+    def _recompute_small(self, fs: list[int], now: float) -> None:
+        """Whole-closure scalar mirror for small dirty closures.
+
+        Identical round assignment, fid-sorted fronts and deferred
+        (depth, fid)-sorted accounting as :meth:`_recompute`'s array path,
+        executed per flow in plain Python: every float64 operation runs on
+        the same values in the same order, so rates, heap keys, running
+        registry/NIC sums and peak telemetry are all bit-identical.  Fronts
+        are routed by the same ``vector_scalar_cutoff`` rule — a wide
+        cascade generation still goes through :meth:`_vector_front` — so
+        the dispatch telemetry (front counts, width histogram, legacy-level
+        equivalents) matches what the array path would record.
+        """
+        flows = self._flows
+        fdep = self._fdep
+        fpar_a = self._fpar
+        fdone = self._fdone
+        mask = self._fsched
+        stats = self.dispatch_stats
+        hist = stats["front_width_hist"]
+        cfg = self.cfg
+        psc = cfg.per_stream_cap
+        icap = cfg.vm_nic.in_cap
+        dec = cfg.decompress_rate
+        bsz = cfg.block_size
+        rate_a, rem_a, tlast_a, ep_a = self._rate, self._rem, self._tlast, self._epoch
+        no_cnt, ni_cnt = self._nout_cnt, self._nin_cnt
+        no_cap, qps_a = self._nout_cap, self._nqps
+        blk_a = self._fblk
+        fsrc_a, fdst_a = self._fsrc, self._fdst
+        heap = self._done_heap
+        nheap = self._notify_heap
+        hasn, fnoti, ftot = self._fhasnoti, self._fnoti, self._ftot
+        # Round assignment (scalar mirror): round 0 unless a live-chain
+        # ancestor is also a candidate, else the conservative depth slot.
+        sched: dict[int, list[int]] = {}
+        if len(fs) == 1:
+            mask[fs[0]] = True
+            sched[0] = fs
+        else:
+            cand = set(fs)
+            deps = [int(fdep[f]) for f in fs]
+            dmin = min(deps)
+            sget = sched.setdefault
+            for i, fid in enumerate(fs):
+                mask[fid] = True
+                r = 0
+                p = fpar_a[fid]
+                while p >= 0 and not fdone[p]:
+                    if p in cand:
+                        r = deps[i] - dmin
+                        break
+                    p = fpar_a[p]
+                sget(r, []).append(fid)
+        cutoff = cfg.vector_scalar_cutoff
+        sc_fids: list[int] = []
+        sc_old: list[float] = []
+        sc_new: list[float] = []
+        acc_fids: list[np.ndarray] = []
+        acc_old: list[np.ndarray] = []
+        acc_new: list[np.ndarray] = []
+        dseen: set = set()
+        while sched:
+            cur = min(sched)
+            front = sched.pop(cur)
+            front.sort()
+            w = len(front)
+            hist_b = w.bit_length()
+            hist[hist_b] = hist.get(hist_b, 0) + 1
+            if w > cutoff:
+                # A wide cascade generation (a changed parent fanning out)
+                # still goes through the array front, exactly as the array
+                # path would route it; its (fid, old, new) triples merge
+                # into the same sorted accounting tail below.
+                fa = np.asarray(front, dtype=_I64)
+                dseen.update(fdep[fa].tolist())
+                stats["fronts_vector"] += 1
+                stats["flows_vector"] += w
+                mask[fa] = False
+                kids = self._vector_front(
+                    fa, now, flows, mask, acc_fids, acc_old, acc_new
+                )
+                if kids:
+                    sched.setdefault(cur + 1, []).extend(kids)
+                continue
+            stats["fronts_scalar"] += 1
+            stats["flows_scalar"] += w
+            kids = []
+            for fid in front:
+                mask[fid] = False
+                dseen.add(int(fdep[fid]))
+                s = fsrc_a[fid]
+                n_out = float(no_cnt[s])
+                r = min(psc, float(no_cap[s]) / n_out)
+                r = min(r, icap / float(ni_cnt[fdst_a[fid]]))
+                r = min(r, dec)
+                if blk_a[fid]:
+                    r = min(r, bsz * float(qps_a[s]) / n_out)
+                p = fpar_a[fid]
+                if p >= 0 and not fdone[p]:
+                    r = min(r, float(rate_a[p]))
+                old = float(rate_a[fid])
+                if r == old:
+                    continue
+                tl = float(tlast_a[fid])
+                rem = float(rem_a[fid])
+                if now > tl:
+                    if old > 0.0:
+                        rem = max(0.0, rem - old * (now - tl))
+                        rem_a[fid] = rem
+                    tlast_a[fid] = now
+                    tl = now
+                rate_a[fid] = r
+                e = int(ep_a[fid]) + 1
+                ep_a[fid] = e
+                if r > 0.0:
+                    heapq.heappush(heap, (tl + rem / r, fid, e))
+                    if hasn[fid]:
+                        pend = float(fnoti[fid]) - (float(ftot[fid]) - rem)
+                        heapq.heappush(nheap, (tl + max(0.0, pend) / r, fid, e))
+                sc_fids.append(fid)
+                sc_old.append(old)
+                sc_new.append(r)
+                cs = flows[fid].children
+                if cs:
+                    for c in cs:
+                        if c.started and not c.done and not mask[c.fid]:
+                            kids.append(c.fid)
+            if kids:
+                sched.setdefault(cur + 1, []).extend(kids)
+        stats["legacy_levels"] += len(dseen)
+        if acc_fids:
+            for a_f, a_o, a_n in zip(acc_fids, acc_old, acc_new):
+                sc_fids.extend(a_f.tolist())
+                sc_old.extend(a_o.tolist())
+                sc_new.extend(a_n.tolist())
+        if not sc_fids:
+            return
+        # Deferred accounting, (depth, fid)-sorted — the same running-sum
+        # add sequence as the array path's lexsorted tail.
+        names = self._nname
+        reg = self._reg_out
+        nreg = self._nreg
+        vm_out, vm_in = self._vm_out, self._vm_in
+        rl = self.rate_log if self.record_rates else None
+        vm_nodes: list[int] = []
+        dst_nodes: list[int] = []
+        for _, fid, old, new in sorted(
+            zip((int(fdep[f]) for f in sc_fids), sc_fids, sc_old, sc_new)
+        ):
+            delta = new - old
+            s = int(fsrc_a[fid])
+            d = int(fdst_a[fid])
+            if nreg[s]:
+                skey = names[s]
+                reg[skey] = reg.get(skey, 0.0) + delta
+            else:
+                vm_out[s] = vm_out[s] + delta
+                vm_nodes.append(s)
+            vm_in[d] = vm_in[d] + delta
+            dst_nodes.append(d)
+            if rl is not None:
+                rl.append((now, fid, new))
+        # Peak telemetry (same max-folds as the array path).
+        if reg:
+            pse = self.peak_shard_egress
+            for skey, egress in reg.items():
+                if egress > pse.get(skey, 0.0):
+                    pse[skey] = egress
+            total = sum(reg.values())
+            if total > self.peak_registry_egress:
+                self.peak_registry_egress = total
+        if vm_nodes:
+            u = -math.inf
+            for nid in set(vm_nodes):
+                cap = float(no_cap[nid])
+                if cap > 0.0 and cap != math.inf:
+                    un = float(vm_out[nid]) / cap
+                    if un > u:
+                        u = un
+            if u > self.peak_nic_utilization:
+                self.peak_nic_utilization = u
+        if icap > 0.0 and icap != math.inf:
+            u = -math.inf
+            for nid in set(dst_nodes):
+                un = float(vm_in[nid]) / icap
+                if un > u:
+                    u = un
+            if u > self.peak_nic_utilization:
+                self.peak_nic_utilization = u
+
+    def _front_rates(
+        self, fids: np.ndarray, src: np.ndarray, dst: np.ndarray
+    ) -> np.ndarray:
+        """Elementwise min-cap chain over one ready front (numpy path).
+
+        Seam for the accelerator tier: :class:`VectorJaxFlowSim` overrides
+        this with the fused jax/pallas kernel; everything around it (fronts,
+        settles, heaps, deferred accounting) is shared.
+        """
+        cfg = self.cfg
+        n_out = self._nout_cnt[src]
+        r = np.minimum(cfg.per_stream_cap, self._nout_cap[src] / n_out)
+        np.minimum(r, cfg.vm_nic.in_cap / self._nin_cnt[dst], out=r)
+        np.minimum(r, cfg.decompress_rate, out=r)
+        blk = self._fblk[fids]
+        if blk.any():
+            # per-shard request throttle shared by the shard's streams
+            bi = np.flatnonzero(blk)
+            r[bi] = np.minimum(
+                r[bi], cfg.block_size * self._nqps[src[bi]] / n_out[bi]
+            )
+        par = self._fpar[fids]
+        pm = par >= 0
+        if pm.any():
+            pi = np.flatnonzero(pm)
+            live = ~self._fdone[par[pi]]
+            if not live.all():
+                pi = pi[live]
+            if pi.size:
+                r[pi] = np.minimum(r[pi], self._rate[par[pi]])
+        return r
+
+    def _vector_front(
         self,
         fids: np.ndarray,
         now: float,
         flows: list[_VFlowState],
-        touched_out: list[int],
-        touched_in: list[int],
+        mask: np.ndarray,
+        acc_fids: list[np.ndarray],
+        acc_old: list[np.ndarray],
+        acc_new: list[np.ndarray],
     ) -> list[int]:
-        """One depth level of ``_recompute`` as scalar math; returns children.
+        """One wide front, vectorized; returns cascade children.
 
-        Gathers each array once, then runs the per-flow min-cap chain /
-        settle / delta accounting in plain Python — the exact operations the
-        vectorized path performs, on the same float64 values in the same
-        order, so results are bit-identical while skipping ~40 fixed-cost
-        numpy dispatches on a handful of flows.
+        Rates, settles, epochs and heap entries update inline (per-flow
+        independent); the order-sensitive delta accounting is *collected*
+        as (fid, old, new) triples for ``_recompute``'s deferred sorted
+        pass.
         """
-        cfg = self.cfg
         src = self._fsrc[fids]
         dst = self._fdst[fids]
-        fl = fids.tolist()
-        src_l = src.tolist()
-        dst_l = dst.tolist()
-        no_l = self._nout_cnt[src].tolist()
-        ni_l = self._nin_cnt[dst].tolist()
-        oc_l = self._nout_cap[src].tolist()
-        qps_l = self._nqps[src].tolist()
-        reg_b = self._nreg[src].tolist()
-        blk_l = self._fblk[fids].tolist()
-        par_l = self._fpar[fids].tolist()
-        old_l = self._rate[fids].tolist()
-        tl_l = self._tlast[fids].tolist()
-        rem_l = self._rem[fids].tolist()
+        r = self._front_rates(fids, src, dst)
+        changed = r != self._rate[fids]
+        if not changed.any():
+            return []
+        ci = np.flatnonzero(changed)
+        ch = fids[ci]  # fid-ascending (fids sorted)
+        r_new = r[ci]
+        old = self._rate[ch]
+        # settle under the old rate (mirror of FlowSim._settle)
+        tl = self._tlast[ch]
+        adv = now > tl
+        if adv.any():
+            ai = np.flatnonzero(adv)
+            aj = ch[ai]
+            pos = old[ai] > 0.0
+            if pos.any():
+                ak = aj[pos]
+                self._rem[ak] = np.maximum(
+                    0.0, self._rem[ak] - self._rate[ak] * (now - self._tlast[ak])
+                )
+            self._tlast[aj] = now
+        self._rate[ch] = r_new
+        self._epoch[ch] += 1
+        pos_r = r_new > 0.0
+        est = np.zeros(ch.size, dtype=_F64)
+        if pos_r.any():
+            pj = np.flatnonzero(pos_r)
+            est[pj] = self._tlast[ch[pj]] + self._rem[ch[pj]] / r_new[pj]
+        ch_l = ch.tolist()
+        ep_l = self._epoch[ch].tolist()
+        entries = [
+            (t, fid, e)
+            for t, fid, e, p in zip(est.tolist(), ch_l, ep_l, pos_r.tolist())
+            if p
+        ]
+        nmask = self._fhasnoti[ch] & pos_r
+        if nmask.any():
+            # prefix-landing estimate under the new rate; a threshold
+            # already passed clamps to "due now" (mirror of FlowSim)
+            nj = np.flatnonzero(nmask)
+            chn = ch[nj]
+            pend = self._fnoti[chn] - (self._ftot[chn] - self._rem[chn])
+            nt = self._tlast[chn] + np.maximum(0.0, pend) / r_new[nj]
+            nheap = self._notify_heap
+            for t, fid, e in zip(
+                nt.tolist(), chn.tolist(), self._epoch[chn].tolist()
+            ):
+                heapq.heappush(nheap, (t, fid, e))
+        if entries:
+            heap = self._done_heap
+            if len(entries) > 1024 and 2 * len(entries) > len(heap):
+                # bulk path: drop stale entries while we rebuild anyway
+                fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
+                heap = [
+                    e for e in heap
+                    if fstarted[e[1]] and not fdone[e[1]] and e[2] == ep[e[1]]
+                ]
+                heap.extend(entries)
+                heapq.heapify(heap)
+                self._done_heap = heap
+            else:
+                for e in entries:
+                    heapq.heappush(heap, e)
+        acc_fids.append(ch)
+        acc_old.append(old)
+        acc_new.append(r_new)
+        # A parent-rate change propagates down the streaming chain.  A child
+        # already pending stays where it is; a child already *processed* is
+        # impossible (it was ancestor-blocked while this parent was pending).
+        kids: list[int] = []
+        for fid in ch_l:
+            cs = flows[fid].children
+            if cs:
+                for c in cs:
+                    if c.started and not c.done and not mask[c.fid]:
+                        kids.append(c.fid)
+        return kids
+
+    def _scalar_front(
+        self,
+        fids: np.ndarray,
+        now: float,
+        flows: list[_VFlowState],
+        mask: np.ndarray,
+        sc_fids: list[int],
+        sc_old: list[float],
+        sc_new: list[float],
+    ) -> list[int]:
+        """One narrow front as scalar math; returns cascade children.
+
+        Gathers each array once, then runs the per-flow min-cap chain /
+        settle in plain Python — the exact operations the vectorized path
+        performs, on the same float64 values in the same order, so results
+        are bit-identical while skipping ~40 fixed-cost numpy dispatches on
+        a handful of flows.  Changed flows are appended to the ``sc_*``
+        lists for the deferred sorted accounting pass.
+        """
+        cfg = self.cfg
         psc = cfg.per_stream_cap
         icap = cfg.vm_nic.in_cap
         dec = cfg.decompress_rate
         bsz = cfg.block_size
         rate_a, rem_a, tlast_a, ep_a = self._rate, self._rem, self._tlast, self._epoch
         fdone = self._fdone
-        names = self._nname
-        reg = self._reg_out
-        vm_out, vm_in = self._vm_out, self._vm_in
         heap = self._done_heap
         nheap = self._notify_heap
         hasn, fnoti, ftot = self._fhasnoti, self._fnoti, self._ftot
-        record = self.record_rates
-        next_chunk: list[int] = []
+        kids: list[int] = []
+        fl = fids.tolist()
+        if len(fl) <= 4:
+            # Tiny front: a handful of scalar reads per flow beats ten
+            # whole-front fancy gathers whose fixed dispatch cost dominates
+            # at this width.  Same float64 reads, same op order —
+            # bit-identical to the gather path below.
+            fsrc_a, fdst_a = self._fsrc, self._fdst
+            no_cnt, ni_cnt = self._nout_cnt, self._nin_cnt
+            no_cap, qps_a = self._nout_cap, self._nqps
+            blk_a, par_a = self._fblk, self._fpar
+            for fid in fl:
+                s = fsrc_a[fid]
+                n_out = float(no_cnt[s])
+                r = min(psc, float(no_cap[s]) / n_out)
+                r = min(r, icap / float(ni_cnt[fdst_a[fid]]))
+                r = min(r, dec)
+                if blk_a[fid]:
+                    r = min(r, bsz * float(qps_a[s]) / n_out)
+                p = par_a[fid]
+                if p >= 0 and not fdone[p]:
+                    r = min(r, float(rate_a[p]))
+                old = float(rate_a[fid])
+                if r == old:
+                    continue
+                tl = float(tlast_a[fid])
+                rem = float(rem_a[fid])
+                if now > tl:
+                    if old > 0.0:
+                        rem = max(0.0, rem - old * (now - tl))
+                        rem_a[fid] = rem
+                    tlast_a[fid] = now
+                    tl = now
+                rate_a[fid] = r
+                e = int(ep_a[fid]) + 1
+                ep_a[fid] = e
+                if r > 0.0:
+                    heapq.heappush(heap, (tl + rem / r, fid, e))
+                    if hasn[fid]:
+                        pend = float(fnoti[fid]) - (float(ftot[fid]) - rem)
+                        heapq.heappush(nheap, (tl + max(0.0, pend) / r, fid, e))
+                sc_fids.append(fid)
+                sc_old.append(old)
+                sc_new.append(r)
+                cs = flows[fid].children
+                if cs:
+                    for c in cs:
+                        if c.started and not c.done and not mask[c.fid]:
+                            kids.append(c.fid)
+            return kids
+        src = self._fsrc[fids]
+        dst = self._fdst[fids]
+        no_l = self._nout_cnt[src].tolist()
+        ni_l = self._nin_cnt[dst].tolist()
+        oc_l = self._nout_cap[src].tolist()
+        qps_l = self._nqps[src].tolist()
+        blk_l = self._fblk[fids].tolist()
+        par_l = self._fpar[fids].tolist()
+        old_l = self._rate[fids].tolist()
+        tl_l = self._tlast[fids].tolist()
+        rem_l = self._rem[fids].tolist()
         for i, fid in enumerate(fl):
             n_out = no_l[i]
             r = min(psc, oc_l[i] / n_out)
@@ -730,17 +1218,6 @@ class VectorFlowSim:
                     rem_l[i] = rem
                 tlast_a[fid] = now
                 tl = now
-            delta = r - old
-            s = src_l[i]
-            d = dst_l[i]
-            if reg_b[i]:
-                skey = names[s]
-                reg[skey] = reg.get(skey, 0.0) + delta
-            else:
-                vm_out[s] += delta
-                touched_out.append(s)
-            vm_in[d] += delta
-            touched_in.append(d)
             rate_a[fid] = r
             e = int(ep_a[fid]) + 1
             ep_a[fid] = e
@@ -751,13 +1228,16 @@ class VectorFlowSim:
                     # "due now" when the threshold has already passed
                     pend = float(fnoti[fid]) - (float(ftot[fid]) - rem_l[i])
                     heapq.heappush(nheap, (tl + max(0.0, pend) / r, fid, e))
-            if record:
-                self.rate_log.append((now, fid, r))
+            sc_fids.append(fid)
+            sc_old.append(old)
+            sc_new.append(r)
             # A parent-rate change propagates down the streaming chain.
-            for c in flows[fid].children:
-                if c.started and not c.done:
-                    next_chunk.append(c.fid)
-        return next_chunk
+            cs = flows[fid].children
+            if cs:
+                for c in cs:
+                    if c.started and not c.done and not mask[c.fid]:
+                        kids.append(c.fid)
+        return kids
 
     # ------------------------------------------------------------------
     def _compact_done_heap(self) -> None:
@@ -772,7 +1252,9 @@ class VectorFlowSim:
     def _next_completion(self) -> float:
         """Earliest valid completion time (lazily dropping stale entries)."""
         heap = self._done_heap
-        if len(heap) > max(64, 4 * self._n_active):
+        if not heap:
+            return math.inf
+        if len(heap) > 64 and len(heap) > 4 * self._n_active:
             self._compact_done_heap()
             heap = self._done_heap
         fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
@@ -787,9 +1269,11 @@ class VectorFlowSim:
     def _next_notify(self) -> float:
         """Earliest valid runnable-prefix time (same lazy invalidation)."""
         heap = self._notify_heap
+        if not heap:
+            return math.inf
         fdone, fstarted, ep = self._fdone, self._fstarted, self._epoch
         hasn = self._fhasnoti
-        if len(heap) > max(64, 4 * self._n_active):
+        if len(heap) > 64 and len(heap) > 4 * self._n_active:
             heap = [
                 e for e in heap
                 if fstarted[e[1]] and not fdone[e[1]] and hasn[e[1]]
@@ -816,6 +1300,51 @@ class VectorFlowSim:
         """
         now = self.now
         flows = self._flows
+        if len(batch) <= 8:
+            # Small batch: per-flow scalar updates apply the exact same op
+            # sequence to every accumulator (the vectorized path's add.at
+            # calls are index-ordered and hit disjoint arrays), minus ~15
+            # fixed-cost numpy dispatches.
+            fsrc_a, fdst_a, rate_a = self._fsrc, self._fdst, self._rate
+            fdone, rem_a, tlast_a = self._fdone, self._rem, self._tlast
+            no_cnt, ni_cnt = self._nout_cnt, self._nin_cnt
+            nreg, vm_out, vm_in = self._nreg, self._vm_out, self._vm_in
+            nlive = self._nlive
+            dn, df = self._dirty_nodes, self._dirty_fids
+            names, reg = self._nname, self._reg_out
+            for fid in batch:
+                s = int(fsrc_a[fid])
+                d = int(fdst_a[fid])
+                r = float(rate_a[fid])
+                fdone[fid] = True
+                rem_a[fid] = 0.0
+                tlast_a[fid] = now
+                no_cnt[s] -= 1
+                ni_cnt[d] -= 1
+                if nreg[s]:
+                    reg[names[s]] -= r
+                else:
+                    vm_out[s] -= r
+                vm_in[d] -= r
+                dn.add(s)
+                dn.add(d)
+                nlive[s] -= 1
+                nlive[d] -= 1
+                st = flows[fid]
+                st.done = True
+                st.t_done = now
+                cs = st.children
+                if cs:
+                    for c in cs:
+                        if c.started and not c.done:
+                            df.add(c.fid)
+            self._n_active -= len(batch)
+            self.events_processed += len(batch)
+            if self._record_trace:
+                tr = self._trace_raw
+                for fid in batch:
+                    tr.append((now, 0, fid))
+            return
         fa = np.asarray(batch, dtype=_I64)
         sk = self._fsrc[fa]
         dk = self._fdst[fa]
@@ -834,32 +1363,38 @@ class VectorFlowSim:
         self.events_processed += len(batch)
         sk_l = sk.tolist()
         dk_l = dk.tolist()
-        rt_l = rt.tolist()
-        reg_l = isreg.tolist()
         dn = self._dirty_nodes
         df = self._dirty_fids
-        nout_f, nin_f = self._nout_fids, self._nin_fids
-        names = self._nname
-        reg = self._reg_out
-        tr = self._trace_raw if self._record_trace else None
+        # Freed shares on both NICs; the lifted parent-cap on children lands
+        # in the main loop below (children must see parents marked done).
+        # The per-node fid lists keep their (now stale) entries — the
+        # recompute closure filter drops them, and lists compact lazily.
+        dn.update(sk_l)
+        dn.update(dk_l)
+        nlive = self._nlive
         for i, fid in enumerate(batch):
             st = flows[fid]
             st.done = True
             st.t_done = now
-            s = sk_l[i]
-            d = dk_l[i]
-            nout_f[s].discard(fid)
-            nin_f[d].discard(fid)
-            if reg_l[i]:
-                reg[names[s]] -= rt_l[i]
-            if tr is not None:
+            nlive[sk_l[i]] -= 1
+            nlive[dk_l[i]] -= 1
+            cs = st.children
+            if cs:
+                for c in cs:
+                    if c.started and not c.done:
+                        df.add(c.fid)
+        if isreg.any():
+            # registry egress keeps the per-flow dict walk in batch order —
+            # its running sums are order-pinned against the incremental engine
+            names = self._nname
+            reg = self._reg_out
+            rt_l = rt.tolist()
+            for i in np.flatnonzero(isreg).tolist():
+                reg[names[sk_l[i]]] -= rt_l[i]
+        if self._record_trace:
+            tr = self._trace_raw
+            for fid in batch:
                 tr.append((now, 0, fid))
-            # Freed shares on both NICs + the lifted parent-cap on children.
-            dn.add(s)
-            dn.add(d)
-            for c in st.children:
-                if c.started and not c.done:
-                    df.add(c.fid)
 
     def _settle_active(self) -> None:
         """Vectorized final settle of every active flow at ``self.now``."""
@@ -905,7 +1440,9 @@ class VectorFlowSim:
                     ts = self._sts[self._sptr]
                     if ts < t_evt:
                         t_evt = ts
-                t_next = min(t_done, t_noti, t_evt)
+                t_next = t_done if t_done < t_noti else t_noti
+                if t_evt < t_next:
+                    t_next = t_evt
                 if t_next == math.inf or t_next > until:
                     if until != math.inf and until > self.now:
                         self.now = until
@@ -959,14 +1496,15 @@ class VectorFlowSim:
                     # A completed flow's prefix landed by definition: fire
                     # any notify that has not gone out yet (runnable <= done
                     # always), before the done callbacks.
-                    hasn = self._fhasnoti
-                    for fid in batch:
-                        if hasn[fid]:
-                            hasn[fid] = False
-                            self.events_processed += 1
-                            st = flows[fid]
-                            if st.on_notify is not None:
-                                st.on_notify(self.now)
+                    if self._any_noti:
+                        hasn = self._fhasnoti
+                        for fid in batch:
+                            if hasn[fid]:
+                                hasn[fid] = False
+                                self.events_processed += 1
+                                st = flows[fid]
+                                if st.on_notify is not None:
+                                    st.on_notify(self.now)
                     for fid in batch:
                         st = flows[fid]
                         if st.on_done is not None:
@@ -983,6 +1521,10 @@ class VectorFlowSim:
                     sptr = self._sptr
                     slen = len(spay)
                     started: list[int] = []
+                    sapp = started.append
+                    papp = pend.append
+                    nev = 0
+                    seq = self._seq
                     while True:
                         if pend:
                             for e in pend:
@@ -1004,19 +1546,22 @@ class VectorFlowSim:
                             fn = heapq.heappop(evh)[2]
                         else:
                             break
-                        self.events_processed += 1
+                        nev += 1
                         if type(fn) is int:
                             st = flows[fn]
                             if st.started or st.done:
                                 continue
                             p = st.parent
                             if p is not None and not p.started:
-                                self._arm_start(st)
+                                # Gated on the parent's start (no polling);
+                                # mirror of _arm_start with the seq local.
+                                st.parent.waiters.append(st)
                                 continue
                             st.started = True
                             st.t_start = now
-                            started.append(fn)
-                            # Release children waiting for this flow to start.
+                            sapp(fn)
+                            # Release children waiting for this flow to start
+                            # (schedule() inlined against the seq local).
                             if st.waiters:
                                 for w in st.waiters:
                                     if not w.started and not w.done:
@@ -1025,13 +1570,19 @@ class VectorFlowSim:
                                             now + w.pipeline_delay,
                                             now,
                                         )
-                                        self.schedule(t, w.fid)
+                                        seq += 1
+                                        papp((t, seq, w.fid))
                                 st.waiters.clear()
                         else:
                             if started:
                                 self._flush_starts(started)
                                 started = []
+                                sapp = started.append
+                            self._seq = seq
                             fn()
+                            seq = self._seq
+                    self._seq = seq
+                    self.events_processed += nev
                     self._sptr = sptr
                     if started:
                         self._flush_starts(started)
@@ -1046,3 +1597,65 @@ class VectorFlowSim:
             if f.done:
                 out[f.flow.dst] = max(out.get(f.flow.dst, 0.0), f.t_done)
         return out
+
+
+class VectorJaxFlowSim(VectorFlowSim):
+    """Vector engine with the fused jax/pallas cap-chain kernel on wide fronts.
+
+    Fronts wider than ``cfg.vector_scalar_cutoff`` route the per-flow
+    min-cap chain through :func:`repro.kernels.cap_chain.cap_chain_rates`
+    — a fused elementwise-minima kernel run in float64 (so its IEEE-754
+    results are bit-identical to the numpy path; see the kernel module for
+    the dtype argument).  Narrow fronts keep the scalar fast path, and when
+    jax is unavailable the engine degrades gracefully to the plain numpy
+    wide fronts; ``jax_active`` records which happened.  Either way the
+    event log is bit-identical to :class:`VectorFlowSim`, which stays the
+    policing oracle for this tier exactly as the incremental engine polices
+    the vector one.
+    """
+
+    def __init__(self, cfg: SimConfig | None = None, *, record_rates: bool = False):
+        super().__init__(cfg, record_rates=record_rates)
+        from repro.kernels.cap_chain import have_jax
+
+        self.jax_active = have_jax()
+        self.dispatch_stats["fronts_jax"] = 0
+        self.dispatch_stats["flows_jax"] = 0
+
+    def _front_rates(
+        self, fids: np.ndarray, src: np.ndarray, dst: np.ndarray
+    ) -> np.ndarray:
+        if not self.jax_active:
+            return super()._front_rates(fids, src, dst)
+        from repro.kernels.cap_chain import cap_chain_rates
+
+        cfg = self.cfg
+        # Tiny numpy gathers feed the kernel; the fused min chain itself —
+        # the ~10 elementwise dispatches the numpy path pays — runs in
+        # pallas.  The parent cap is gathered as +inf where absent or
+        # already done, matching the numpy path's masked minimum.
+        par = self._fpar[fids]
+        pr = np.full(fids.size, np.inf, dtype=_F64)
+        pm = par >= 0
+        if pm.any():
+            pi = np.flatnonzero(pm)
+            live = ~self._fdone[par[pi]]
+            if not live.all():
+                pi = pi[live]
+            if pi.size:
+                pr[pi] = self._rate[par[pi]]
+        stats = self.dispatch_stats
+        stats["fronts_jax"] += 1
+        stats["flows_jax"] += int(fids.size)
+        return cap_chain_rates(
+            self._nout_cnt[src],
+            self._nin_cnt[dst],
+            self._nout_cap[src],
+            self._nqps[src],
+            pr,
+            self._fblk[fids],
+            per_stream_cap=cfg.per_stream_cap,
+            in_cap=cfg.vm_nic.in_cap,
+            decompress_rate=cfg.decompress_rate,
+            block_size=cfg.block_size,
+        )

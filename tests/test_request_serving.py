@@ -480,3 +480,47 @@ def test_cpu_slots_stretch_colocated_requests():
     assert any(t > dur for t in tight)  # contention stretched something
     assert all(abs(w - dur) < 1e-9 for w in wide)  # no stretch with slots
     assert max(tight) <= dur * 8  # bounded by co-residency, not unbounded
+
+
+# ----------------------------------------------------------------------
+# giga_replay_config: serving + block provisioning on one shared sim
+# ----------------------------------------------------------------------
+def test_giga_replay_config_shape():
+    from repro.sim.scale import giga_replay_config
+
+    cfg = giga_replay_config(0)
+    assert cfg.serving is not None
+    assert cfg.images is not None
+    assert set(cfg.images) == {t.function_id for t in cfg.tenants}
+    assert cfg.wave.engine == "vector"
+    assert cfg.wave.record_trace is False
+    assert cfg.vm_pool_size == 100_000
+    # the failover must actually fire inside the (short) replay window
+    assert cfg.failover_at is not None and cfg.failover_at < cfg.duration_s()
+
+
+def test_serving_plus_blocks_replay_deterministic():
+    """The giga-replay combination — sub-tick serving, block-level
+    provisioning and the vector engine on ONE shared FlowSim — at test
+    scale: the failover fires, cold starts flow through the block path,
+    and a re-run is bit-identical."""
+    from repro.sim.scale import giga_replay_config
+
+    def run():
+        cfg = giga_replay_config(0, n_tenants=4, minutes=2, scale=0.25)
+        cfg.vm_pool_size = 300
+        return run_multi_tenant(cfg)
+
+    a, b = run(), run()
+    assert a.failovers == 1
+    assert a.cold_starts > 0
+    total_req = sum(t.requests for t in a.per_tenant.values())
+    total_done = sum(t.completed for t in a.per_tenant.values())
+    assert total_req > 0 and total_done > 0
+    assert a.timelines == b.timelines
+    assert a.cold_starts == b.cold_starts
+    key = lambda r: {  # noqa: E731
+        k: (t.requests, t.completed, t.p99_response_s, t.wasted_provisions)
+        for k, t in r.per_tenant.items()
+    }
+    assert key(a) == key(b)

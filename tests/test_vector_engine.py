@@ -1,22 +1,30 @@
-"""VectorFlowSim: differential verification against the other two engines.
+"""VectorFlowSim: differential verification against the other engines.
 
 The vector engine is the third member of the oracle chain (``reference`` →
-``incremental`` → ``vector``, see ``repro.sim.engine.ENGINES``) and is held
-to a *stricter* bar than the incremental engine was:
+``incremental`` → ``vector`` → ``vector_jax``, see
+``repro.sim.engine.ENGINES``) and is held to a *stricter* bar than the
+incremental engine was:
 
   * against the incremental engine it must be **bit-identical** — event
     logs compare equal as exact floats (run_scale trace, provision-wave
     latencies, TraceReplay TickStats) and peak-egress telemetry matches
     exactly;
   * against the reference oracle it must agree to ±1e-9 on completion
-    times and peak egress, like the incremental engine does.
+    times and peak egress, like the incremental engine does;
+  * the ``vector_jax`` tier (fused pallas cap-chain kernel; numpy fallback
+    when jax is absent) must be bit-identical to ``vector`` — and both
+    must be cutoff-invariant: forcing every ready front down the wide
+    vectorized/pallas path (``vector_scalar_cutoff=0``) may not change a
+    single bit.
 
 Randomized plans + churn (seeded always; hypothesis variant when the
-package is installed) drive all three engines through the same scenarios,
+package is installed) drive the engines through the same scenarios,
 including mid-flight ``set_parent`` and slow-VM re-rating.  The
 ``_done_heap`` compaction satellite is pinned here for both heap-based
-engines: repeated re-rating must not grow the completion heap unboundedly.
+engines; the wide-front dispatch telemetry (``dispatch_stats``) is fuzzed
+for internal consistency against event counts.
 """
+import dataclasses
 import random
 
 import pytest
@@ -31,10 +39,11 @@ from repro.core.topology import (
     kraken_plan,
     on_demand_plan,
 )
+from repro.kernels.cap_chain import have_jax
 from repro.sim import ScaleConfig, WaveConfig, provision_wave, run_scale
 from repro.sim.engine import ENGINES, FlowSim, SimConfig, make_sim
 from repro.sim.reference import ReferenceFlowSim
-from repro.sim.vector_engine import VectorFlowSim
+from repro.sim.vector_engine import VectorFlowSim, VectorJaxFlowSim
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -67,30 +76,66 @@ def _run_engine(cls, plan, cfg, *, slow_vms=None):
     return sim, states
 
 
-def _assert_three_way(plan, cfg: SimConfig, *, slow_vms=None):
-    """One plan through all three engines: pairwise agreement.
+def _assert_bit_identical(inc, inc_states, other, other_states):
+    """``other`` (a vector-family engine) matches ``inc`` exactly."""
+    assert other.now == inc.now
+    assert other.trace == inc.trace
+    assert other.events_processed == inc.events_processed
+    assert other.completion_times() == inc.completion_times()
+    assert other.peak_registry_egress == inc.peak_registry_egress
+    assert other.peak_shard_egress == inc.peak_shard_egress
+    assert other.peak_nic_utilization == inc.peak_nic_utilization
+    for a, b in zip(other_states, inc_states):
+        assert a.flow == b.flow
+        assert a.t_start == b.t_start and a.t_done == b.t_done
+        assert a.remaining == b.remaining and a.rate == b.rate
 
-    vector vs incremental is exact (same floats); vector vs reference is
-    ±1e-9 — the reference engine re-rates after every single event, so a
-    batch of same-instant completions can take a microscopically different
-    arithmetic path.
+
+def _base_stats(sim):
+    """dispatch_stats minus the jax-only counters (subset of vector's)."""
+    return {
+        k: v
+        for k, v in sim.dispatch_stats.items()
+        if k not in ("fronts_jax", "flows_jax")
+    }
+
+
+def _assert_four_way(plan, cfg: SimConfig, *, slow_vms=None):
+    """One plan through all four engines: pairwise agreement.
+
+    vector and vector_jax vs incremental are exact (same floats); vector
+    vs reference is ±1e-9 — the reference engine re-rates after every
+    single event, so a batch of same-instant completions can take a
+    microscopically different arithmetic path.  Both vector tiers are also
+    re-run with ``vector_scalar_cutoff=0`` so every ready front takes the
+    wide vectorized (resp. pallas, when jax is present) path — the cutoff
+    is a pure performance knob and may not change a single bit.
     """
     inc, inc_states = _run_engine(FlowSim, plan, cfg, slow_vms=slow_vms)
     vec, vec_states = _run_engine(VectorFlowSim, plan, cfg, slow_vms=slow_vms)
     ref, ref_states = _run_engine(ReferenceFlowSim, plan, cfg, slow_vms=slow_vms)
+    jx, jx_states = _run_engine(VectorJaxFlowSim, plan, cfg, slow_vms=slow_vms)
 
-    # vector vs incremental: bit-identical
-    assert vec.now == inc.now
-    assert vec.trace == inc.trace
-    assert vec.events_processed == inc.events_processed
-    assert vec.completion_times() == inc.completion_times()
-    assert vec.peak_registry_egress == inc.peak_registry_egress
-    assert vec.peak_shard_egress == inc.peak_shard_egress
-    assert vec.peak_nic_utilization == inc.peak_nic_utilization
-    for a, b in zip(vec_states, inc_states):
-        assert a.flow == b.flow
-        assert a.t_start == b.t_start and a.t_done == b.t_done
-        assert a.remaining == b.remaining and a.rate == b.rate
+    # vector / vector_jax vs incremental: bit-identical
+    _assert_bit_identical(inc, inc_states, vec, vec_states)
+    _assert_bit_identical(inc, inc_states, jx, jx_states)
+    assert _base_stats(jx) == _base_stats(vec)
+
+    # cutoff invariance: every front forced down the wide path
+    wide = dataclasses.replace(cfg, vector_scalar_cutoff=0)
+    vec0, vec0_states = _run_engine(VectorFlowSim, plan, wide, slow_vms=slow_vms)
+    jx0, jx0_states = _run_engine(VectorJaxFlowSim, plan, wide, slow_vms=slow_vms)
+    _assert_bit_identical(inc, inc_states, vec0, vec0_states)
+    _assert_bit_identical(inc, inc_states, jx0, jx0_states)
+    s, s0 = vec.dispatch_stats, vec0.dispatch_stats
+    # the front decomposition is cutoff-independent; only the path differs
+    assert s0["fronts_scalar"] == 0 and s0["flows_scalar"] == 0
+    assert s0["fronts_vector"] == s["fronts_scalar"] + s["fronts_vector"]
+    assert s0["front_width_hist"] == s["front_width_hist"]
+    if jx0.jax_active:
+        # with jax present, every wide front went through the pallas kernel
+        assert jx0.dispatch_stats["fronts_jax"] == s0["fronts_vector"]
+        assert jx0.dispatch_stats["flows_jax"] == s0["flows_vector"]
 
     # vector vs reference: 1e-9 completion times + peak egress
     assert _close(vec.now, ref.now)
@@ -107,44 +152,44 @@ def _assert_three_way(plan, cfg: SimConfig, *, slow_vms=None):
 
 
 # ----------------------------------------------------------------------
-# Canonical topologies through all three engines
+# Canonical topologies through all four engines
 # ----------------------------------------------------------------------
-def test_three_way_faasnet_tree():
+def test_four_way_faasnet_tree():
     ft = FunctionTree("f")
     for i in range(15):
         ft.insert(f"vm{i}")
     plan = faasnet_plan(ft, image_bytes=int(100 * MB), startup_fraction=0.2)
-    _assert_three_way(plan, _wave_simconfig())
+    _assert_four_way(plan, _wave_simconfig())
 
 
-def test_three_way_faasnet_tree_with_straggler():
+def test_four_way_faasnet_tree_with_straggler():
     ft = FunctionTree("f")
     for i in range(15):
         ft.insert(f"vm{i}")
     plan = faasnet_plan(ft, image_bytes=int(100 * MB), startup_fraction=0.2)
-    _assert_three_way(plan, _wave_simconfig(), slow_vms={"vm1": 2 * MB})
+    _assert_four_way(plan, _wave_simconfig(), slow_vms={"vm1": 2 * MB})
 
 
-def test_three_way_registry_star():
+def test_four_way_registry_star():
     plan = on_demand_plan(
         [f"vm{i}" for i in range(16)],
         image_bytes=int(100 * MB),
         startup_fraction=0.2,
     )
-    _assert_three_way(plan, _wave_simconfig())
+    _assert_four_way(plan, _wave_simconfig())
 
 
-def test_three_way_kraken_mesh():
+def test_four_way_kraken_mesh():
     plan = kraken_plan(
         [f"vm{i}" for i in range(12)],
         layer_bytes=[int(10 * MB)] * 4,
         origin="origin",
         seed=7,
     )
-    _assert_three_way(plan, _wave_simconfig(coordinator_cost_s=0.070))
+    _assert_four_way(plan, _wave_simconfig(coordinator_cost_s=0.070))
 
 
-def test_three_way_sharded_registry():
+def test_four_way_sharded_registry():
     from repro.core.registry import RegistrySpec
 
     spec = RegistrySpec(shards=3, egress_cap=2.0 * 125e6, qps=500.0)
@@ -154,7 +199,7 @@ def test_three_way_sharded_registry():
         startup_fraction=0.25,
         registry=spec,
     )
-    _assert_three_way(plan, _wave_simconfig(registry=spec))
+    _assert_four_way(plan, _wave_simconfig(registry=spec))
 
 
 # ----------------------------------------------------------------------
@@ -218,7 +263,11 @@ def test_make_sim_selects_backend():
     assert isinstance(make_sim(SimConfig()), FlowSim)
     assert isinstance(make_sim(SimConfig(engine="vector")), VectorFlowSim)
     assert isinstance(make_sim(SimConfig(engine="reference")), ReferenceFlowSim)
-    assert set(ENGINES) == {"incremental", "vector", "reference"}
+    jx = make_sim(SimConfig(engine="vector_jax"))
+    assert isinstance(jx, VectorJaxFlowSim)
+    assert isinstance(jx, VectorFlowSim)  # subclass: shares the whole engine
+    assert jx.jax_active == have_jax()  # graceful numpy fallback otherwise
+    assert set(ENGINES) == {"incremental", "vector", "vector_jax", "reference"}
 
 
 def test_make_sim_rejects_unknown_engine():
@@ -398,7 +447,7 @@ def _churned_run(cls, plan, cfg, churn_script):
     return sim
 
 
-def test_random_plan_churn_three_way_fuzz():
+def test_random_plan_churn_four_way_fuzz():
     for seed in range(6):
         rng = random.Random(1000 + seed)
         plan = _random_plan(rng, 12)
@@ -411,14 +460,115 @@ def test_random_plan_churn_three_way_fuzz():
         inc = _churned_run(FlowSim, plan, cfg, churn)
         vec = _churned_run(VectorFlowSim, plan, cfg, churn)
         ref = _churned_run(ReferenceFlowSim, plan, cfg, churn)
+        jx = _churned_run(VectorJaxFlowSim, plan, cfg, churn)
         assert vec.trace == inc.trace, seed
         assert vec.completion_times() == inc.completion_times(), seed
         assert vec.peak_shard_egress == inc.peak_shard_egress, seed
+        assert jx.trace == vec.trace, seed
+        assert jx.completion_times() == vec.completion_times(), seed
+        assert _base_stats(jx) == _base_stats(vec), seed
         ct_v, ct_r = vec.completion_times(), ref.completion_times()
         assert set(ct_v) == set(ct_r), seed
         for k, v in ct_v.items():
             assert _close(v, ct_r[k]), (seed, k, v, ct_r[k])
         assert _close(vec.peak_registry_egress, ref.peak_registry_egress), seed
+
+
+def test_dispatch_telemetry_fuzz_consistency():
+    """Seeded fuzz: dispatch telemetry is internally consistent and
+    consistent with event counts on every scenario.
+
+    Invariants pinned (see ``VectorFlowSim._recompute``):
+      * every counted recompute processed at least one front, every front
+        at least one flow;
+      * fronts never exceed ``legacy_levels`` — the per-depth sweeps the
+        retired algorithm would have dispatched on the same closures (that
+        inequality *is* the wide-front claim);
+      * the width histogram buckets (keyed by ``width.bit_length()``)
+        account for every front and bound the flow totals;
+      * recomputes are driven by events and churn only.
+    """
+    for seed in range(8):
+        rng = random.Random(4242 + seed)
+        n_nodes = rng.randrange(8, 40)
+        plan = _random_plan(rng, n_nodes)
+        churn = []
+        for k in range(rng.randrange(4)):
+            vm = f"vm{rng.randrange(n_nodes)}"
+            cap = None if rng.random() < 0.3 else rng.uniform(1, 40) * MB
+            churn.append((0.2 + 0.3 * k, vm, cap))
+        cutoff = rng.choice([0, 2, 64])
+        cfg = _wave_simconfig(vector_scalar_cutoff=cutoff)
+        vec = _churned_run(VectorFlowSim, plan, cfg, churn)
+        s = vec.dispatch_stats
+        fronts = s["fronts_scalar"] + s["fronts_vector"]
+        flows = s["flows_scalar"] + s["flows_vector"]
+        assert s["recompute_calls"] >= 1, seed
+        assert fronts >= s["recompute_calls"], seed
+        assert flows >= fronts, seed
+        assert s["legacy_levels"] >= fronts, seed  # the wide-front claim
+        hist = s["front_width_hist"]
+        assert sum(hist.values()) == fronts, seed
+        assert all(b >= 1 for b in hist), seed  # fronts are never empty
+        lo = sum(c * (1 << (b - 1) if b > 1 else 1) for b, c in hist.items())
+        hi = sum(c * ((1 << b) - 1) for b, c in hist.items())
+        assert lo <= flows <= hi, (seed, lo, flows, hi)
+        if cutoff == 0:
+            assert s["fronts_scalar"] == 0, seed
+        # recomputes fire only after event batches, plan adds, or churn ops
+        assert (
+            s["recompute_calls"] <= vec.events_processed + len(churn) + 2
+        ), (seed, s["recompute_calls"], vec.events_processed)
+
+
+def test_blocks_on_warm_cache_four_way():
+    """Blocks-on provisioning with a warm block cache: four-way agreement.
+
+    Block-granular flows exercise the QPS-throttle leg of the cap chain
+    (`block_size * qps / n_out`), and a warm cache makes the plans sparse
+    and irregular — the worst case for front batching.
+    """
+    from repro.core import BlockCache, faasnet_block_plan, shared_base_images
+
+    imgs = shared_base_images(6, 2, image_bytes=int(48 * MB))
+    results = {}
+    for name, cls in (
+        ("inc", FlowSim),
+        ("vec", VectorFlowSim),
+        ("jax", VectorJaxFlowSim),
+    ):
+        for cutoff in (0, 64):
+            if name == "inc" and cutoff == 0:
+                continue  # the knob only exists on the vector tiers
+            sim = cls(SimConfig(record_trace=True, vector_scalar_cutoff=cutoff))
+            cache = BlockCache()
+            cache.add_image("seed", imgs[0])  # warm: base layers resident
+            runnable, done = {}, {}
+            for i, img in enumerate(imgs):
+                ft = FunctionTree(img.name)
+                for v in (f"f{i}a", f"f{i}b", f"f{i}c"):
+                    ft.insert(v)
+                sim.add_plan(
+                    faasnet_block_plan(ft, image=img, cache=cache),
+                    t0=0.01 * i,
+                    on_node_done=lambda vm, t, i=i: done.__setitem__(
+                        (i, vm), max(done.get((i, vm), 0.0), t)
+                    ),
+                    on_node_runnable=lambda vm, t, i=i: runnable.setdefault(
+                        (i, vm), t
+                    ),
+                )
+            sim.run()
+            results[(name, cutoff)] = (
+                runnable,
+                done,
+                sim.now,
+                sim.events_processed,
+                sim.trace,
+            )
+    base = results[("inc", 64)]
+    for key, got in results.items():
+        assert got == base, key
 
 
 if HAVE_HYPOTHESIS:
